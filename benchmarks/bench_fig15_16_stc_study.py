@@ -1,0 +1,115 @@
+"""Sec. 7.1 / Fig. 15+16: the next-generation sparse-tensor-core case
+study.
+
+  Fig. 16: bandwidth required for ideal speedup vs sparsity ratio — the
+  uncompressed-input traffic + metadata growth that starves STC-flexible.
+  Fig. 15: cycles & EDP of DSTC vs STC vs STC-flexible vs
+  STC-flexible-rle vs STC-flexible-rle-dualCompress across densities —
+  reproducing the study's conclusions:
+    (a) naive ratio extension gets no speedup (SMEM bandwidth-bound),
+    (b) RLE helps metadata but not the real bottleneck,
+    (c) compressing the dense operand recovers the speedup without
+        input-side skipping.
+"""
+from __future__ import annotations
+
+from repro.core import Sparseloop, matmul
+from repro.core.presets import dense_design, dstc_like, stc_like, tc_arch
+
+from .common import canonical_mapping, emit, timed
+
+M = K = N = 64
+RATIOS = ((2, 4), (2, 6), (2, 8))
+# provisioned SMEM share (words/cycle): sized so the 2:4 design is
+# exactly balanced (paper Sec. 7.1.3 — the link was provisioned FOR 2:4)
+SMEM_BW = 40.0
+
+
+def _streaming_mapping():
+    """Inputs (B) re-streamed from SMEM for every weight tile (RF too
+    small to hold the activations), with the full 256-lane PE array
+    spatially mapped — the tensor-core reality that creates the
+    bandwidth wall."""
+    from repro.core.mapping import nest
+    return nest(2,
+                ("m", 4, 1), ("n", 4, 1), ("n", 2, 1, "spatial"),
+                ("k", 64, 0),
+                ("m", 16, 0, "spatial"), ("n", 8, 0, "spatial"))
+
+
+def run() -> list[tuple[str, float, str]]:
+    mapping = _streaming_mapping()
+
+    # ---------------- Fig. 16: bandwidth requirement analysis ----------
+    print("Fig.16-style bandwidth requirement for IDEAL speedup "
+          "(relative to dense weight traffic):")
+    print(f"{'ratio':>6} {'weights':>8} {'inputs':>7} {'meta(CP)':>9} "
+          f"{'meta(RLE)':>10}")
+    for (n, m) in RATIOS:
+        speed = m / n
+        w = 1.0
+        inputs = speed
+        import math
+        cp_bits = max(1, (m - 1).bit_length())
+        rle_bits = max(1, (m - 1).bit_length())  # worst-case runs
+        meta_cp = cp_bits / 16
+        meta_rle = rle_bits / 16 * 0.75
+        print(f"  {n}:{m:>2} {w:8.2f} {inputs:7.2f} {meta_cp:9.3f} "
+              f"{meta_rle:10.3f}")
+    print("-> input traffic grows with the target speedup while weights "
+          "stay 1x: the SMEM link provisioned for 2:4 starves higher "
+          "ratios (paper Sec. 7.1.3)\n")
+
+    # ---------------- Fig. 15: design comparison across densities ------
+    designs = {}
+    for (n, m) in RATIOS:
+        designs[f"STC-{n}:{m}"] = stc_like(n, m, smem_bw=SMEM_BW)
+        designs[f"STC-{n}:{m}-rle"] = stc_like(n, m, fmt_kind="RLE",
+                                               smem_bw=SMEM_BW)
+        designs[f"STC-{n}:{m}-rle-dual"] = stc_like(
+            n, m, fmt_kind="RLE", compress_b=True, smem_bw=SMEM_BW)
+    dstc = dstc_like(smem_bw=SMEM_BW)
+    dense = dense_design(tc_arch("tc-dense", smem_bw=SMEM_BW))
+    base = Sparseloop(dense).evaluate(matmul(M, K, N), mapping,
+                                      check_capacity=False).result
+
+    print(f"{'design':>22} {'ratio':>6} {'cycles(norm)':>13} "
+          f"{'EDP(norm)':>10} {'bottleneck':>11}")
+    results = {}
+    dt = 0.0
+    for (n, m) in RATIOS:
+        wl_struct = matmul(M, K, N, densities={
+            "A": ("structured", {"n": n, "m": m}),
+            "B": ("uniform", 0.55)})
+        wl_unstruct = matmul(M, K, N, densities={
+            "A": ("uniform", n / m), "B": ("uniform", 0.55)})
+        for name in (f"STC-{n}:{m}", f"STC-{n}:{m}-rle",
+                     f"STC-{n}:{m}-rle-dual"):
+            ev, t = timed(lambda d=designs[name]: Sparseloop(d).evaluate(
+                wl_struct, mapping, check_capacity=False))
+            dt = t
+            r = ev.result
+            results[name] = r
+            print(f"{name:>22} {n}:{m:>2} {r.cycles/base.cycles:13.3f} "
+                  f"{r.edp/base.edp:10.3f} {r.bottleneck:>11}")
+        ev_d = Sparseloop(dstc).evaluate(wl_unstruct, mapping,
+                                         check_capacity=False).result
+        results[f"DSTC@{n}:{m}"] = ev_d
+        print(f"{'DSTC (unstructured)':>22} {n}:{m:>2} "
+              f"{ev_d.cycles/base.cycles:13.3f} "
+              f"{ev_d.edp/base.edp:10.3f} {ev_d.bottleneck:>11}")
+
+    s24 = base.cycles / results["STC-2:4"].cycles
+    s28_naive = base.cycles / results["STC-2:8"].cycles
+    s28_dual = base.cycles / results["STC-2:8-rle-dual"].cycles
+    print(f"\n2:4 speedup {s24:.2f}x; naive 2:8 {s28_naive:.2f}x "
+          f"(theoretical 4x — bandwidth-starved); dualCompress 2:8 "
+          f"{s28_dual:.2f}x -> compressing the dense operand recovers "
+          f"most of the lost speedup (paper Sec. 7.1.4)")
+    return [("fig15_stc_study", dt * 1e6,
+             f"s24={s24:.2f};s28_naive={s28_naive:.2f};"
+             f"s28_dual={s28_dual:.2f}")]
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,169 @@
+"""Sec. 7.2 / Fig. 17: co-design of dataflow x SAFs x sparsity.
+
+Following the paper's methodology, each (dataflow-class x SAF) design is
+characterized by its BEST mapping: we sweep a mapping family, classify
+each candidate by its B-reuse behaviour —
+
+  ReuseABZ: every B tile is fetched on-chip exactly once (B reused
+            across A tiles; needs on-chip residency),
+  ReuseAZ : B is re-streamed from DRAM for successive A tiles (no
+            on-chip B reuse),
+
+and report the best EDP per (class, SAF placement) per density.
+Expected findings: (1) the winner flips between NN-range and hyper-sparse
+densities; (2) the stack-everything design (ReuseABZ.HierarchicalSkip) is
+never the EDP winner — its dataflow denies the off-chip skip its
+opportunities while still paying the intersection-check overhead.
+"""
+from __future__ import annotations
+
+import itertools
+
+from repro.core import Sparseloop, matmul, nest
+from repro.core.mapping import factorize
+from repro.core.presets import two_level_arch
+from repro.core.taxonomy import ActionSAF, SAFKind, SAFSpec, TensorFormat
+
+from .common import emit, timed
+
+M = K = N = 64
+DENSITIES = (0.001, 0.01, 0.06, 0.2, 0.5)
+FMT = TensorFormat.classic("CSR", coord_bits=8)
+
+
+def _design(hierarchical: bool):
+    from repro.core.engine import Design
+    fmts = {(lvl, t): FMT for lvl in ("DRAM", "Buffer")
+            for t in ("A", "B")}
+    actions = [ActionSAF(SAFKind.SKIP, "Buffer", "B", ("A",),
+                         double_sided=True),
+               ActionSAF(SAFKind.SKIP, "Buffer", "Z", ("A", "B"))]
+    if hierarchical:
+        actions.insert(0, ActionSAF(SAFKind.SKIP, "DRAM", "B", ("A",),
+                                    double_sided=True))
+    name = "HierarchicalSkip" if hierarchical else "InnermostSkip"
+    return Design(arch=two_level_arch(buffer_kwords=64, pes=256),
+                  safs=SAFSpec(formats=fmts, actions=tuple(actions)),
+                  name=name)
+
+
+def _candidates():
+    """Mapping family: both L1 orders x tiling factors."""
+    out = []
+    for order in ("mn", "nm"):
+        for m1, m0 in factorize(M):
+            for n1, rest in factorize(N):
+                for ns, n0 in factorize(rest):
+                    if ns > 16 or len(out) > 4000:
+                        continue
+                    loops = []
+                    l1 = [("m", m1, 1), ("n", n1, 1)]
+                    if order == "nm":
+                        l1.reverse()
+                    loops += [x for x in l1 if x[1] > 1]
+                    if ns > 1:
+                        loops.append(("n", ns, 1, "spatial"))
+                    if n0 > 1:
+                        loops.append(("n", n0, 0))
+                    loops.append(("k", K, 0))
+                    if m0 > 1:
+                        loops.append(("m", m0, 0))
+                    out.append((order, m1, n1, nest(2, *loops)))
+    return out
+
+
+def _fixed_mapping(reuse_b: bool):
+    """The paper's two dataflows as fixed mappings: ReuseABZ keeps each B
+    tile on-chip across A tiles (n above m at L1 -> m trailing reuse);
+    ReuseAZ re-streams B for every A tile (m above n)."""
+    if reuse_b:
+        return nest(2,
+                    ("n", 8, 1), ("m", 16, 1), ("n", 2, 1, "spatial"),
+                    ("n", 4, 0), ("k", 64, 0), ("m", 4, 0))
+    return nest(2,
+                ("m", 16, 1), ("n", 8, 1), ("n", 2, 1, "spatial"),
+                ("n", 4, 0), ("k", 64, 0), ("m", 4, 0))
+
+
+def run_fixed() -> tuple[bool, bool]:
+    """Paper-faithful fixed-dataflow comparison (Table 8 style)."""
+    designs = {"InnermostSkip": _design(False),
+               "HierarchicalSkip": _design(True)}
+    combos = {f"{c}.{s}": (_fixed_mapping(c == "ReuseABZ"), designs[s])
+              for c in ("ReuseABZ", "ReuseAZ") for s in designs}
+    print("paper-faithful fixed dataflows:")
+    print(f"{'density':>8} | " + " ".join(f"{k:>26}" for k in combos))
+    winners, hier_abz = {}, False
+    for d in DENSITIES:
+        wl = matmul(M, K, N, densities={"A": ("uniform", d),
+                                        "B": ("uniform", d)})
+        edps = {k: Sparseloop(ds).evaluate(wl, mp,
+                                           check_capacity=False).result.edp
+                for k, (mp, ds) in combos.items()}
+        norm = edps["ReuseABZ.InnermostSkip"]
+        print(f"{d:8.3f} | " + " ".join(f"{edps[k]/norm:26.3f}"
+                                        for k in combos))
+        w = min(edps, key=edps.get)
+        winners[d] = w
+        hier_abz |= w == "ReuseABZ.HierarchicalSkip"
+    flips = len(set(winners.values())) > 1
+    print(f"fixed-dataflow winners: {winners}")
+    return flips, not hier_abz
+
+
+def run() -> list[tuple[str, float, str]]:
+    flips_fixed, never_best_fixed = run_fixed()
+    print()
+    designs = {"InnermostSkip": _design(False),
+               "HierarchicalSkip": _design(True)}
+    cands = _candidates()
+    combos = [f"{c}.{s}" for c in ("ReuseABZ", "ReuseAZ")
+              for s in designs]
+    print(f"{'density':>8} | " + " ".join(f"{c:>26}" for c in combos)
+          + "   (best EDP, normalized)")
+    winners = {}
+    hier_abz_best = False
+    dt = 0.0
+    for d in DENSITIES:
+        wl = matmul(M, K, N, densities={"A": ("uniform", d),
+                                        "B": ("uniform", d)})
+        best: dict[str, float] = {}
+        for sname, design in designs.items():
+            model = Sparseloop(design)
+            for (order, m1, n1, mapping) in cands:
+                (ev), t = timed(lambda: model.evaluate(
+                    wl, mapping, check_capacity=False), reps=1)
+                dt = t
+                # classify by B reuse: fill rounds == distinct tiles?
+                tl = ev.dense.of("B", 0)
+                distinct = max(1, n1)
+                cls = "ReuseABZ" if tl.fill_rounds <= distinct else \
+                    "ReuseAZ"
+                key = f"{cls}.{sname}"
+                if ev.result.valid and (key not in best
+                                        or ev.result.edp < best[key]):
+                    best[key] = ev.result.edp
+        norm = best["ReuseABZ.InnermostSkip"]
+        print(f"{d:8.3f} | " + " ".join(
+            f"{best.get(c, float('nan'))/norm:26.3f}" for c in combos))
+        w = min(best, key=best.get)
+        winners[d] = w
+        hier_abz_best |= (w == "ReuseABZ.HierarchicalSkip")
+    flips = len(set(winners.values())) > 1
+    print(f"\nsearched winners: { {k: v for k, v in winners.items()} }")
+    print(f"\nREPRODUCTION (fixed dataflows, paper setup): winner flips="
+          f"{flips_fixed} (paper: yes); stacked-features design never "
+          f"best={never_best_fixed} (paper: never best)")
+    print(f"BEYOND-PAPER (free mapping search): flips={flips}; the "
+          f"search finds ReuseABZ.Hierarchical points with small leader "
+          f"windows that DO win at hyper-sparsity={hier_abz_best} — "
+          f"co-designing the mapping can rescue the stacked design, "
+          f"refining the paper's fixed-dataflow conclusion")
+    return [("fig17_codesign", dt * 1e6,
+             f"winner_flips={flips_fixed};"
+             f"stacked_never_best={never_best_fixed};"
+             f"search_refines_conclusion={hier_abz_best}")]
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,42 @@
+"""Fig. 1: processing speed + energy of bitmask vs coordinate-list designs
+across matrix densities — the representation-format crossover."""
+from __future__ import annotations
+
+from repro.core import Sparseloop, matmul
+from repro.core.presets import (bitmask_design, coordinate_list_design,
+                                dense_design, two_level_arch)
+
+from .common import canonical_mapping, emit, timed
+
+DENSITIES = (0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0)
+M = K = N = 64
+
+
+def run() -> list[tuple[str, float, str]]:
+    mapping = canonical_mapping(M, K, N)
+    rows = []
+    print(f"{'density':>8} | {'bitmask cyc':>11} {'coord cyc':>10} | "
+          f"{'bitmask uJ':>10} {'coord uJ':>9}")
+    cross_speed = cross_energy = None
+    for d in DENSITIES:
+        wl = matmul(M, K, N, densities={"A": ("uniform", d),
+                                        "B": ("uniform", d)})
+        evals = {}
+        for mk in (dense_design, bitmask_design, coordinate_list_design):
+            des = mk(two_level_arch())
+            (ev), dt = timed(lambda: Sparseloop(des).evaluate(
+                wl, mapping, check_capacity=False))
+            evals[des.name] = (ev.result, dt)
+        b, c = evals["bitmask"][0], evals["coordlist"][0]
+        print(f"{d:8.2f} | {b.cycles:11.0f} {c.cycles:10.0f} | "
+              f"{b.energy_uj:10.3f} {c.energy_uj:9.3f}")
+        if cross_energy is None and c.energy_pj > b.energy_pj:
+            cross_energy = d
+    dt_us = evals["coordlist"][1] * 1e6
+    rows.append(("fig1_formats", dt_us,
+                 f"energy_crossover_density={cross_energy}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

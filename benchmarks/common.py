@@ -1,0 +1,91 @@
+"""Shared benchmark helpers + representative workload sets."""
+from __future__ import annotations
+
+import time
+
+from repro.core import matmul
+from repro.core.mapping import LoopNest, nest
+
+# ----------------------------------------------------------------------
+# Representative DNN layers as GEMMs (M = output pixels/tokens,
+# K = reduction, N = output channels) — the im2col view used by
+# GEMM-based accelerators.  Sparsities are typical published
+# weight/activation densities for the pruned nets the paper evaluates.
+# ----------------------------------------------------------------------
+RESNET50_LAYERS = [
+    ("conv2_x", 3136, 576, 64, 0.4, 0.55),
+    ("conv3_x", 784, 1152, 128, 0.35, 0.5),
+    ("conv4_x", 196, 2304, 256, 0.3, 0.45),
+    ("conv5_x", 49, 4608, 512, 0.3, 0.4),
+]
+BERT_BASE_LAYERS = [
+    ("qkv", 512, 768, 2304, 0.5, 1.0),
+    ("attn_out", 512, 768, 768, 0.5, 1.0),
+    ("ffn_in", 512, 768, 3072, 0.5, 0.6),
+    ("ffn_out", 512, 3072, 768, 0.5, 0.6),
+]
+VGG16_LAYERS = [
+    ("conv3_1", 3136, 1152, 256, 0.35, 0.5),
+    ("conv4_1", 784, 2304, 512, 0.3, 0.45),
+    ("fc6", 1, 25088, 4096, 0.1, 0.45),
+]
+ALEXNET_LAYERS = [
+    ("conv2", 729, 1200, 256, 0.4, 0.6),
+    ("conv3", 169, 2304, 384, 0.35, 0.55),
+    ("fc6", 1, 9216, 4096, 0.1, 0.5),
+]
+WORKLOAD_SETS = {
+    "ResNet50": RESNET50_LAYERS,
+    "BERT-base": BERT_BASE_LAYERS,
+    "VGG16": VGG16_LAYERS,
+    "AlexNet": ALEXNET_LAYERS,
+}
+
+
+def layer_workload(M, K, N, dA, dB):
+    return matmul(M, K, N, densities={"A": ("uniform", dA),
+                                      "B": ("uniform", dB)})
+
+
+def _div_floor(x: int, target: int) -> int:
+    best = 1
+    for d in range(1, x + 1):
+        if x % d == 0 and d <= target:
+            best = d
+    return best
+
+
+def canonical_mapping(M: int, K: int, N: int, *, ns: int = 16,
+                      bm: int = 16, bn: int = 16) -> LoopNest:
+    """Generic 2-level mapping used across the benches."""
+    bm = _div_floor(M, bm)
+    bn = _div_floor(N, bn)
+    ns = _div_floor(N // bn, ns)
+    loops = []
+    if M // bm > 1:
+        loops.append(("m", M // bm, 1))
+    if N // (bn * ns) > 1:
+        loops.append(("n", N // (bn * ns), 1))
+    if ns > 1:
+        loops.append(("n", ns, 1, "spatial"))
+    if bn > 1:
+        loops.append(("n", bn, 0))
+    loops.append(("k", K, 0))
+    if bm > 1:
+        loops.append(("m", bm, 0))
+    return nest(2, *loops)
+
+
+def timed(fn, *args, reps: int = 3, **kw):
+    """(result, seconds_per_call)."""
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / reps
+
+
+def emit(rows: list[tuple[str, float, str]]) -> None:
+    """Print the ``name,us_per_call,derived`` CSV contract."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")

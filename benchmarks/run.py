@@ -1,0 +1,54 @@
+"""Benchmark aggregator: one module per paper table/figure (+ the
+beyond-paper benches).  Prints a final ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig1 stc   # substring filter
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (bench_fig1_formats, bench_fig11_scnn, bench_fig12_eyerissv2,
+               bench_fig13_dstc, bench_fig15_16_stc_study,
+               bench_fig17_codesign, bench_kernels, bench_stc_exact,
+               bench_table5_cphc, bench_table7_compression, bench_vmapper)
+from .common import emit
+
+MODULES = [
+    ("fig1_formats", bench_fig1_formats),
+    ("table5_cphc", bench_table5_cphc),
+    ("fig11_scnn", bench_fig11_scnn),
+    ("fig12_eyerissv2", bench_fig12_eyerissv2),
+    ("fig13_dstc", bench_fig13_dstc),
+    ("table7_compression", bench_table7_compression),
+    ("stc_exact", bench_stc_exact),
+    ("fig15_16_stc_study", bench_fig15_16_stc_study),
+    ("fig17_codesign", bench_fig17_codesign),
+    ("vmapper", bench_vmapper),
+    ("kernels", bench_kernels),
+]
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    rows: list[tuple[str, float, str]] = []
+    failed = []
+    for name, mod in MODULES:
+        if filters and not any(f in name for f in filters):
+            continue
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
+        try:
+            rows.extend(mod.run())
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+            rows.append((name, -1.0, f"FAILED:{type(e).__name__}"))
+    print(f"\n{'=' * 72}\n== CSV (name,us_per_call,derived)\n{'=' * 72}")
+    emit(rows)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Quickstart: describe a sparse accelerator with the SAF taxonomy and
+evaluate it with Sparseloop's three-step analytical pipeline.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import Sparseloop, matmul, nest
+from repro.core.presets import (coordinate_list_design, dense_design,
+                                two_level_arch)
+
+# 1. Workload: sparse matmul Z[m,n] = sum_k A[m,k] B[k,n]  (Fig. 6 style)
+wl = matmul(64, 64, 64, densities={"A": ("uniform", 0.25),
+                                   "B": ("uniform", 0.5)})
+
+# 2. Mapping: coordinate-space tiling across DRAM -> Buffer -> 4 PEs
+mapping = nest(2,
+               ("m", 16, 1), ("n", 4, 1), ("n", 4, 1, "spatial"),
+               ("n", 4, 0), ("k", 64, 0), ("m", 4, 0))
+print("mapping:")
+print(mapping.describe(), "\n")
+
+# 3. Designs: dense baseline vs SCNN-like coordinate-list + skipping
+for design in (dense_design(two_level_arch()),
+               coordinate_list_design(two_level_arch())):
+    ev = Sparseloop(design).evaluate(wl, mapping)
+    print(f"=== {design.name} ===")
+    print(design.safs.describe())
+    print(ev.result.describe(), "\n")

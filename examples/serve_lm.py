@@ -1,0 +1,12 @@
+"""Batched serving example: continuous batching over a reduced model.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+out = main(["--arch", "qwen2-0.5b", "--reduced", "--requests", "10",
+            "--batch", "4", "--prompt-len", "12", "--gen", "16",
+            "--temperature", "0.8"])
+print(f"generated {sum(len(v) for v in out['outputs'].values())} tokens "
+      f"across {len(out['outputs'])} requests at "
+      f"{out['tokens_per_s']:.1f} tok/s")

@@ -1,0 +1,40 @@
+"""The framework bridge: Sparseloop advises N:M sparsity configs for the
+assigned LM architectures on TPU v5e, and the advised config is executed
+by the nm_spmm Pallas kernel (validated against its jnp oracle).
+
+  PYTHONPATH=src python examples/sparsity_advisor.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.advisor import advise, describe
+from repro.kernels.nm_spmm.ops import nm_spmm, nm_spmm_ref
+from repro.sparsity import nm_prune_dense, pack_nm
+
+print("== Sparseloop TPU-v5e advisor ==")
+print("decode (8 tokens/device): weight streaming dominates -> compress")
+for arch in ("qwen3-4b", "command-r-35b", "deepseek-v2-lite-16b"):
+    cfg = get_config(arch)
+    print(f"\n--- {arch}, decode ---")
+    print(describe(advise(cfg, tokens_per_device=8)))
+print("\ntrain (65536 tokens/device): compute-bound -> stay dense "
+      "(the MXU cannot skip; DESIGN.md §3)")
+print(describe(advise(get_config("qwen3-4b"), tokens_per_device=65536)))
+
+print("\n== executing the advised 2:8 config with the Pallas kernel ==")
+rng = np.random.default_rng(0)
+M, K, N = 128, 512, 256
+a = jnp.asarray(rng.normal(size=(M, K)), jnp.bfloat16)
+w = nm_prune_dense(jnp.asarray(rng.normal(size=(K, N)), jnp.float32),
+                   2, 8)
+wv, wi = pack_nm(w, 2, 8)
+out = nm_spmm(a, wv.astype(jnp.bfloat16), wi, n=2, m=8)
+ref = nm_spmm_ref(a, wv.astype(jnp.bfloat16), wi, 2, 8)
+err = float(jnp.max(jnp.abs(out - ref)))
+dense_bytes = K * N * 2
+packed_bytes = wv.size * 2 + wi.size
+print(f"kernel vs oracle max|err| = {err:.4f} (bf16)")
+print(f"HBM weight bytes: {packed_bytes} vs dense {dense_bytes} "
+      f"({packed_bytes / dense_bytes:.3f}x) -> the advisor's predicted "
+      f"~3x decode speedup comes from exactly this traffic cut")

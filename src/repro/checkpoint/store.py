@@ -1,0 +1,137 @@
+"""Checkpointing: atomic, async, resharding-on-restore.
+
+Layout:  <dir>/step_<N>/
+             manifest.json       (pytree structure + dtypes + extra state)
+             arrays.npz          (flattened leaves, key = tree path)
+         <dir>/LATEST            (atomic pointer file)
+
+* `save` is asynchronous (background thread) — the train loop never
+  blocks on I/O; a Manager joins the previous save before starting the
+  next (bounded staleness of exactly one checkpoint).
+* `load` restores onto ANY device topology: leaves are stored unsharded
+  and re-placed with `jax.device_put(x, sharding)` at restore time —
+  this is what makes elastic restarts (different device count) work.
+* writes go to a temp dir + atomic rename, so a preemption mid-save never
+  corrupts the latest checkpoint (fault tolerance requirement).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    flat = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            # npz cannot round-trip ml_dtypes; widen to f32 (exact)
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat, jax.tree_util.tree_structure(tree)
+
+
+def save_checkpoint(directory: str | pathlib.Path, step: int, tree,
+                    extra: dict | None = None) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    tmp = directory / f".tmp_step_{step}_{time.time_ns()}"
+    tmp.mkdir()
+    flat, _ = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **flat)
+    manifest = {"step": step, "keys": sorted(flat),
+                "extra": extra or {}, "time": time.time()}
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    final = directory / f"step_{step}"
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    # atomic LATEST pointer
+    ptr = directory / ".LATEST.tmp"
+    ptr.write_text(str(step))
+    ptr.rename(directory / "LATEST")
+    return final
+
+
+def latest_step(directory: str | pathlib.Path) -> int | None:
+    ptr = pathlib.Path(directory) / "LATEST"
+    if not ptr.exists():
+        return None
+    try:
+        return int(ptr.read_text().strip())
+    except ValueError:
+        return None
+
+
+def load_checkpoint(directory: str | pathlib.Path, abstract_tree,
+                    step: int | None = None,
+                    shardings=None) -> tuple[object, dict]:
+    """Restore into the structure of `abstract_tree`; if `shardings`
+    (matching pytree of Sharding) is given, leaves are placed sharded —
+    works for any current topology (elastic restore)."""
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    d = directory / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    data = np.load(d / "arrays.npz")
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(abstract_tree)
+    # None means "no placement constraint" and must count as a leaf
+    shard_leaves = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: x is None)
+        if shardings is not None else [None] * len(leaves))
+    out = []
+    for (path, leaf), shard in zip(leaves, shard_leaves):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = data[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, shard) if shard is not None
+                   else jax.device_put(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    return tree, manifest["extra"]
+
+
+class CheckpointManager:
+    """Async save + retention."""
+
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, tree, extra: dict | None = None):
+        self.wait()
+        # materialize on host BEFORE backgrounding (snapshot semantics)
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            save_checkpoint(self.dir, step, host_tree, extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.dir.glob("step_*"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)

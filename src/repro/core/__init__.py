@@ -1,0 +1,35 @@
+"""Sparseloop core: analytical modeling of sparse tensor accelerators.
+
+The paper's three-step decoupled pipeline (Fig. 5):
+
+  1. dataflow modeling  (dataflow.py)  — dense traffic from the mapping
+  2. sparse modeling    (sparse.py)    — SAF filtering via statistical
+                                          density models (density.py) and
+                                          format models (formats.py)
+  3. micro-architecture (microarch.py) — cycles & energy
+
+plus the description language (workload / arch / taxonomy / mapping), the
+mapspace search (mapper.py), representative design presets (presets.py),
+and the actual-data reference simulator (refsim.py) used for validation.
+"""
+from .arch import Architecture, ComputeLevel, StorageLevel
+from .density import (ActualDataModel, BandedModel, DenseModel,
+                      DensityModel, StructuredModel, UniformModel,
+                      make_density_model)
+from .engine import Design, Evaluation, Sparseloop
+from .mapping import Loop, LoopNest, nest
+from .microarch import EvalResult, evaluate_microarch
+from .taxonomy import (ActionSAF, RankFormat, SAFKind, SAFSpec,
+                       TensorFormat)
+from .workload import TensorSpec, Workload, conv2d, dot, matmul, mv
+
+__all__ = [
+    "Architecture", "ComputeLevel", "StorageLevel",
+    "ActualDataModel", "BandedModel", "DenseModel", "DensityModel",
+    "StructuredModel", "UniformModel", "make_density_model",
+    "Design", "Evaluation", "Sparseloop",
+    "Loop", "LoopNest", "nest",
+    "EvalResult", "evaluate_microarch",
+    "ActionSAF", "RankFormat", "SAFKind", "SAFSpec", "TensorFormat",
+    "TensorSpec", "Workload", "conv2d", "dot", "matmul", "mv",
+]

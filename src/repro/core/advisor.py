@@ -1,0 +1,144 @@
+"""TPU sparsity advisor: Sparseloop applied to this framework's own
+hardware target.
+
+For each weight matmul of an assigned LM architecture (per-device shard
+sizes under the production mesh), the advisor evaluates the TPU-v5e
+Sparseloop preset with and without N:M weight compression and reports
+where compression pays.  This is the paper's design-space-exploration
+loop (Sec. 7) pointed at the framework itself: on TPU the only SAF with a
+compute-side payoff is the *format* (DESIGN.md §3 — MXU cannot skip), so
+the advisor's decision boundary is exactly "is this matmul HBM-bound?".
+
+The kernel that implements the advised config is kernels/nm_spmm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .engine import Design, Sparseloop
+from .mapping import LoopNest, nest
+from .presets import dense_design, tpu_nm_design, tpu_v5e_arch
+from .workload import matmul
+
+
+def _div_floor(x: int, target: int) -> int:
+    """Largest divisor of x that is <= target."""
+    best = 1
+    for d in range(1, int(math.isqrt(x)) + 1):
+        if x % d == 0:
+            if d <= target:
+                best = max(best, d)
+            if x // d <= target:
+                best = max(best, x // d)
+    return best
+
+
+def tpu_mapping(M: int, K: int, N: int, *, bm: int = 2048, bn: int = 2048,
+                bk: int = 1024, macs: int = 104448) -> LoopNest:
+    """Canonical HBM->VMEM->REG/MXU mapping: (bm x bn) output tile spread
+    spatially across the MXU, k streamed temporally with in-array (REG)
+    accumulation; a k-spatial factor models the systolic depth so small-M
+    decode matmuls still fill the array."""
+    bm = _div_floor(M, bm)
+    bn = _div_floor(N, bn)
+    bk = _div_floor(K, bk)
+    # systolic depth: spend leftover parallelism on k
+    ksp = _div_floor(bk, max(1, macs // max(1, bm * bn)))
+    bk2 = bk // ksp
+    mo, no, ko = M // bm, N // bn, K // bk
+    return nest(
+        3,
+        ("m", mo, 2), ("n", no, 2), ("k", ko, 2),
+        ("k", bk2, 1), ("m", bm, 1, "spatial"), ("n", bn, 1, "spatial"),
+        ("k", ksp, 0, "spatial"),
+    )
+
+
+@dataclasses.dataclass
+class LayerAdvice:
+    layer: str
+    M: int
+    K: int
+    N: int
+    dense_cycles: float
+    dense_bottleneck: str
+    best_name: str
+    best_cycles: float
+    best_energy_ratio: float
+
+    @property
+    def speedup(self) -> float:
+        return self.dense_cycles / self.best_cycles
+
+
+def _weight_matmuls(cfg, tokens_per_device: int, tp: int):
+    """(name, M, K, N) for the arch's main per-device weight matmuls."""
+    d = cfg.d_model
+    out = [("qkv_proj", tokens_per_device, d,
+            max(1, (cfg.q_dim + 2 * cfg.kv_dim) // tp))]
+    out.append(("o_proj", tokens_per_device, max(1, cfg.q_dim // tp), d))
+    if cfg.moe:
+        out.append(("expert_ffn_in", tokens_per_device * cfg.moe.top_k
+                    // max(1, cfg.moe.num_experts // tp or 1),
+                    d, cfg.moe.expert_d_ff))
+        out.append(("expert_ffn_out",
+                    tokens_per_device * cfg.moe.top_k
+                    // max(1, cfg.moe.num_experts // tp or 1),
+                    cfg.moe.expert_d_ff, d))
+    elif cfg.d_ff:
+        out.append(("ffn_in", tokens_per_device, d,
+                    max(1, cfg.d_ff // tp)))
+        out.append(("ffn_out", tokens_per_device,
+                    max(1, cfg.d_ff // tp), d))
+    return [(n, max(8, M), max(8, K), max(8, N)) for n, M, K, N in out]
+
+
+def advise(cfg, *, tokens_per_device: int = 4096, tp: int = 16,
+           nm_options: tuple[tuple[int, int], ...] = ((2, 4), (2, 8)),
+           weight_density_model: str = "structured") -> list[LayerAdvice]:
+    """Evaluate dense vs N:M-compressed weights for each weight matmul."""
+    advices = []
+    for name, M, K, N in _weight_matmuls(cfg, tokens_per_device, tp):
+        mapping = tpu_mapping(M, K, N)
+        wl_dense = matmul(M, K, N, name=name)
+        base = Sparseloop(dense_design(tpu_v5e_arch())).evaluate(
+            wl_dense, mapping, check_capacity=False)
+        best = ("dense", base.result.cycles, 1.0)
+        for (n, m) in nm_options:
+            wl = matmul(M, K, N, name=name, densities={
+                "A": ("structured", {"n": n, "m": m})})
+            # B is the weight in the kernel; in the Einsum convention here
+            # A is the (M,K) operand -> put the structure on B instead:
+            wl = matmul(M, K, N, name=name, densities={
+                "B": ("structured", {"n": n, "m": m})})
+            des = tpu_nm_design(n, m)
+            # compress the weight tensor B (the A-format entries of the
+            # preset target the first operand; remap to B)
+            fmts = {(lvl, "B"): f for (lvl, t), f in
+                    des.safs.formats.items()}
+            des = Design(arch=des.arch,
+                         safs=dataclasses.replace(des.safs, formats=fmts),
+                         name=des.name)
+            ev = Sparseloop(des).evaluate(wl, mapping,
+                                          check_capacity=False)
+            if ev.result.cycles < best[1]:
+                best = (des.name, ev.result.cycles,
+                        ev.result.energy_pj / base.result.energy_pj)
+        advices.append(LayerAdvice(
+            layer=name, M=M, K=K, N=N,
+            dense_cycles=base.result.cycles,
+            dense_bottleneck=base.result.bottleneck,
+            best_name=best[0], best_cycles=best[1],
+            best_energy_ratio=best[2]))
+    return advices
+
+
+def describe(advices: list[LayerAdvice]) -> str:
+    lines = [f"{'layer':>14} {'M':>7} {'K':>6} {'N':>6} "
+             f"{'bottleneck':>10} {'best':>14} {'speedup':>8}"]
+    for a in advices:
+        lines.append(f"{a.layer:>14} {a.M:>7} {a.K:>6} {a.N:>6} "
+                     f"{a.dense_bottleneck:>10} {a.best_name:>14} "
+                     f"{a.speedup:>7.2f}x")
+    return "\n".join(lines)

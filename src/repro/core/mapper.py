@@ -1,0 +1,148 @@
+"""Mapspace search (Sparseloop Sec. 5.1 'Mapspace Constraints').
+
+Characterizing a design requires finding its best mapping for each
+workload; this module enumerates/samples the mapspace (loop-bound
+factorizations x permutations) under user constraints and evaluates
+candidates with the analytical engine.
+
+`search` is exhaustive/sampled single-threaded Python; `best_of` is the
+convenience wrapper used by the benchmarks.  A vectorized JAX evaluator
+for large mapspaces lives in vmapper.py (a beyond-paper speed feature).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import random
+from typing import Callable, Iterable, Sequence
+
+from .engine import Design, Evaluation, Sparseloop
+from .mapping import Loop, LoopNest, factor_splits
+from .workload import Workload
+
+
+@dataclasses.dataclass
+class MapspaceConstraints:
+    """Partial constraints: which ranks may be tiled at which level, loop
+    order templates, and spatial rank assignment per level."""
+
+    #: rank -> number of levels it may split across (default: all levels)
+    max_factors: int | None = None
+    #: per-level allowed permutation templates; None = try all orders
+    permutations: dict[int, Sequence[str]] | None = None
+    #: {level: {rank: bound}} forced spatial loops
+    spatial: dict[int, dict[str, int]] | None = None
+    #: cap on candidates evaluated
+    budget: int = 2000
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best: Evaluation | None
+    best_nest: LoopNest | None
+    evaluated: int
+    valid: int
+
+    @property
+    def cycles(self) -> float:
+        return self.best.cycles if self.best else float("inf")
+
+
+def _nests(workload: Workload, num_levels: int,
+           cons: MapspaceConstraints) -> Iterable[LoopNest]:
+    """Generate candidate nests: factor each rank across levels, then
+    order loops within each level (sampled permutations)."""
+    rng = random.Random(cons.seed)
+    ranks = list(workload.rank_bounds)
+    spatial = cons.spatial or {}
+
+    # divide each rank bound by any forced spatial factors first
+    residual = dict(workload.rank_bounds)
+    for lvl, d in spatial.items():
+        for r, b in d.items():
+            if residual[r] % b:
+                raise ValueError(f"spatial bound {b} does not divide {r}")
+            residual[r] //= b
+
+    per_rank_splits = {
+        r: list(factor_splits(residual[r], num_levels)) for r in ranks
+    }
+    combos = list(itertools.product(*[per_rank_splits[r] for r in ranks]))
+    rng.shuffle(combos)
+
+    emitted = 0
+    for combo in combos:
+        if emitted >= cons.budget:
+            return
+        # combo[i][lvl] = temporal bound of rank i at level lvl
+        # (index 0 = innermost level)
+        level_loops: list[list[Loop]] = [[] for _ in range(num_levels)]
+        for i, r in enumerate(ranks):
+            for lvl in range(num_levels):
+                b = combo[i][lvl]
+                if b > 1:
+                    level_loops[lvl].append(Loop(r, b, lvl))
+        for lvl, d in spatial.items():
+            for r, b in d.items():
+                if b > 1:
+                    level_loops[lvl].append(Loop(r, b, lvl, spatial=True))
+
+        # order within level: honour permutation template or sample
+        def ordered(lvl: int) -> list[list[Loop]]:
+            loops = level_loops[lvl]
+            temporal = [lp for lp in loops if not lp.spatial]
+            spat = [lp for lp in loops if lp.spatial]
+            if cons.permutations and lvl in cons.permutations:
+                order = {r: i for i, r in enumerate(cons.permutations[lvl])}
+                temporal.sort(key=lambda lp: order.get(lp.rank, 99))
+                return [temporal + spat]
+            if len(temporal) <= 3:
+                return [list(p) + spat
+                        for p in itertools.permutations(temporal)]
+            rng.shuffle(temporal)
+            return [temporal + spat]
+
+        for per_level in itertools.product(
+                *[ordered(lvl) for lvl in range(num_levels)]):
+            loops: list[Loop] = []
+            for lvl in range(num_levels - 1, -1, -1):
+                loops.extend(per_level[lvl])
+            emitted += 1
+            yield LoopNest(loops=tuple(loops), num_levels=num_levels)
+            if emitted >= cons.budget:
+                return
+
+
+def search(design: Design, workload: Workload,
+           cons: MapspaceConstraints | None = None,
+           objective: Callable[[Evaluation], float] | None = None
+           ) -> SearchResult:
+    """Find the best valid mapping.  Default objective: EDP."""
+    cons = cons or MapspaceConstraints()
+    objective = objective or (lambda ev: ev.edp)
+    model = Sparseloop(design)
+    best, best_nest, best_obj = None, None, float("inf")
+    n_eval = n_valid = 0
+    for nest in _nests(workload, design.arch.num_levels, cons):
+        try:
+            ev = model.evaluate(workload, nest)
+        except ValueError:
+            continue
+        n_eval += 1
+        if not ev.result.valid:
+            continue
+        n_valid += 1
+        obj = objective(ev)
+        if obj < best_obj:
+            best, best_nest, best_obj = ev, nest, obj
+    return SearchResult(best=best, best_nest=best_nest,
+                        evaluated=n_eval, valid=n_valid)
+
+
+def best_of(design: Design, workload: Workload, budget: int = 500,
+            spatial: dict[int, dict[str, int]] | None = None,
+            seed: int = 0) -> SearchResult:
+    return search(design, workload,
+                  MapspaceConstraints(budget=budget, spatial=spatial,
+                                      seed=seed))

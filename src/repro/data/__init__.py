@@ -1,0 +1,3 @@
+from .pipeline import DataState, SyntheticLM, make_pipeline
+
+__all__ = ["DataState", "SyntheticLM", "make_pipeline"]

@@ -1,0 +1,118 @@
+"""Block-sparse matmul kernels: the paper's GATE vs SKIP taxonomy mapped
+onto the two mechanisms Pallas TPU actually has (DESIGN.md §3):
+
+  * GATE  (`gated_mm_kernel`): the grid still visits every (i, j, k)
+    block — cycles are spent — but `pl.when(mask)` predicates the MXU
+    work away for empty blocks.  Saves energy (and MXU issue slots), not
+    time: exactly the paper's Sec. 3.1.2 semantics.
+
+  * SKIP  (`skip_mm_kernel`): a scalar-prefetched list of nonzero blocks
+    drives data-dependent BlockSpec index_maps, so the grid is only as
+    long as the nonzero block count — cycles are NOT spent on empty
+    blocks.  Saves energy AND time: Sec. 3.1.3, with the coordinate list
+    playing the role of the CP metadata.
+
+The bitmask/`(k,j)`-list metadata mirror the B vs CP format trade-off of
+the paper's Fig. 1 at tile granularity (the TPU's natural fiber).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ----------------------------------------------------------------------
+# GATE: full grid, predicated compute
+# ----------------------------------------------------------------------
+def _gated_kernel(mask_ref, a_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    k = pl.program_id(2)
+    j = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[k, j] != 0)
+    def _compute():   # gated away when the block bitmask says empty
+        acc_ref[...] += jax.lax.dot(a_ref[...], w_ref[...],
+                                    preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _out():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gated_mm_kernel(a, w, block_mask, *, bm=128, bk=128, bn=128,
+                    interpret=False):
+    M, K = a.shape
+    _, N = w.shape
+    k_steps = K // bk
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k, mask: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k, mask: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, mask: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_gated_kernel, k_steps=k_steps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(block_mask.astype(jnp.int32), a, w)
+
+
+# ----------------------------------------------------------------------
+# SKIP: grid over nonzero blocks only (data-dependent index maps)
+# ----------------------------------------------------------------------
+def _skip_kernel(kidx_ref, jidx_ref, a_ref, w_ref, o_ref, acc_ref, *,
+                 nnzb: int):
+    b = pl.program_id(1)
+    j_cur = jidx_ref[b]
+    first = jnp.logical_or(b == 0, jidx_ref[jnp.maximum(b - 1, 0)] != j_cur)
+    last = jnp.logical_or(b == nnzb - 1,
+                          jidx_ref[jnp.minimum(b + 1, nnzb - 1)] != j_cur)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(a_ref[...], w_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(last)
+    def _out():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def skip_mm_kernel(a, w, kidx, jidx, *, bm=128, bk=128, bn=128,
+                   interpret=False):
+    """kidx/jidx: (NNZB,) int32 coordinates of nonzero (k, j) blocks,
+    sorted by j (column-major) so each output block is a contiguous run.
+    Every column block j must appear at least once (see ops.py)."""
+    M, K = a.shape
+    _, N = w.shape
+    nnzb = kidx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(M // bm, nnzb),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, b, ki, ji: (i, ki[b])),
+            pl.BlockSpec((bk, bn), lambda i, b, ki, ji: (ki[b], ji[b])),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, b, ki, ji: (i, ji[b])),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_skip_kernel, nnzb=nnzb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(kidx.astype(jnp.int32), jidx.astype(jnp.int32), a, w)

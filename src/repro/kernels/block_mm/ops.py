@@ -1,0 +1,59 @@
+"""jit'd wrappers for the gate/skip block-sparse matmuls."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import gated_mm_kernel, skip_mm_kernel
+from .ref import block_mm_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def gated_mm(a, w, block_mask, *, bm=128, bk=128, bn=128,
+             interpret: bool | None = None):
+    if interpret is None:
+        interpret = _on_cpu()
+    bm = min(bm, a.shape[0])
+    bk = min(bk, a.shape[1])
+    bn = min(bn, w.shape[1])
+    return gated_mm_kernel(a, w, block_mask, bm=bm, bk=bk, bn=bn,
+                           interpret=interpret)
+
+
+def block_indices(block_mask: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Nonzero (k, j) block coordinates sorted by j, with every column
+    block guaranteed present (empty columns get a dummy (0, j) entry whose
+    W block is zero by definition of the mask — caller must zero W there,
+    as block_mm_ref does)."""
+    mask = np.asarray(block_mask) != 0
+    ks, js = np.nonzero(mask)
+    missing = [j for j in range(mask.shape[1]) if not mask[:, j].any()]
+    if missing:
+        ks = np.concatenate([ks, np.zeros(len(missing), ks.dtype)])
+        js = np.concatenate([js, np.asarray(missing, js.dtype)])
+    order = np.argsort(js, kind="stable")
+    return ks[order].astype(np.int32), js[order].astype(np.int32)
+
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def skip_mm(a, w_masked, kidx, jidx, *, bm=128, bk=128, bn=128,
+            interpret: bool | None = None):
+    """w_masked must already have zero blocks zeroed (dummy entries for
+    empty columns then contribute nothing)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    bm = min(bm, a.shape[0])
+    bk = min(bk, a.shape[1])
+    bn = min(bn, w_masked.shape[1])
+    return skip_mm_kernel(a, w_masked, kidx, jidx, bm=bm, bk=bk, bn=bn,
+                          interpret=interpret)
+
+
+__all__ = ["gated_mm", "skip_mm", "block_indices", "block_mm_ref"]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for block-sparse matmul (gate and skip semantics are
+numerically identical — they differ only in cycles/energy)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_mm_ref(a: jax.Array, w: jax.Array, block_mask: jax.Array,
+                 bk: int, bn: int) -> jax.Array:
+    """a: (M, K); w: (K, N); block_mask: (K//bk, N//bn) 0/1.
+    Zero blocks of W are treated as exact zeros."""
+    K, N = w.shape
+    mask = jnp.repeat(jnp.repeat(block_mask.astype(w.dtype), bk, axis=0),
+                      bn, axis=1)
+    return jnp.dot(a.astype(jnp.float32),
+                   (w * mask).astype(jnp.float32))

@@ -1,0 +1,102 @@
+"""Causal flash attention Pallas TPU kernel (online softmax).
+
+The attention hot-spot of every assigned architecture.  Classic
+three-term streaming: for each query tile, stream key/value tiles
+through VMEM keeping running (max, sum, accumulator) statistics — the
+S x S score matrix never exists, so HBM attention traffic drops from
+O(S^2) to O(S * D) per head.
+
+Taxonomy note (DESIGN.md §3): the causal structure is *structured
+sparsity of the score tensor*.  Off-diagonal future blocks are GATED
+with `pl.when` (the grid still visits them — cycles spent, MXU idle),
+the exact Sec. 3.1.2 semantics; a skip variant would reindex the grid
+like kernels/block_mm.skip_mm_kernel.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, k_steps: int, scale: float,
+                  causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: key block strictly in the future of the whole query block
+    # contributes nothing -> gate the compute away
+    needed = jnp.logical_or(jnp.logical_not(causal),
+                            ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0]                       # (bq, d)
+        k = k_ref[0]                       # (bk, d)
+        v = v_ref[0]                       # (bk, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0)
+            k_pos = ki * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot(p.astype(v.dtype), v,
+                                      preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == k_steps - 1)
+    def _out():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, bq: int = 128, bk: int = 128,
+                           causal: bool = True,
+                           interpret: bool = False) -> jax.Array:
+    """q/k/v: (BH, S, D) -> (BH, S, D) f32."""
+    BH, S, D = q.shape
+    assert S % bq == 0 and S % bk == 0
+    k_steps = S // bk
+    scale = 1.0 / math.sqrt(D)
+    grid = (BH, S // bq, k_steps)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, k_steps=k_steps,
+                          scale=scale, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),        # running max
+            pltpu.VMEM((bq,), jnp.float32),        # running sum
+            pltpu.VMEM((bq, D), jnp.float32),      # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

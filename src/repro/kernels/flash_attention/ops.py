@@ -1,0 +1,39 @@
+"""jit'd wrapper: (B, S, H, D) multi-head causal flash attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+from .ref import flash_attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("bq", "bk", "causal", "interpret"))
+def flash_attention(q, k, v, *, bq: int = 128, bk: int = 128,
+                    causal: bool = True, interpret: bool | None = None):
+    """q: (B,S,H,D); k/v: (B,S,KV,D) — GQA handled by head repetition."""
+    if interpret is None:
+        interpret = _on_cpu()
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    bq = min(bq, S)
+    bk = min(bk, S)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    o = flash_attention_kernel(qf, kf, vf, bq=bq, bk=bk, causal=causal,
+                               interpret=interpret)
+    return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+__all__ = ["flash_attention", "flash_attention_ref"]

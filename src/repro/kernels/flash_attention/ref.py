@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for causal flash attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q/k/v: (BH, S, D) -> (BH, S, D) in f32."""
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(q.shape[-1])
+    if causal:
+        S = q.shape[1]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))

@@ -1,0 +1,102 @@
+"""N:M structured-sparse matmul Pallas TPU kernel.
+
+TPU adaptation of the sparse tensor core (paper Sec. 7.1, Fig. 14): the
+MXU cannot skip lanes, so — exactly like the paper's
+STC-flexible-rle-dualCompress finding — ALL the win comes from moving
+less data.  Weights live in HBM compressed (n/m of the values + CP
+offsets); each grid step streams a compressed weight tile into VMEM,
+decompresses it there with a one-hot expansion (VPU work, no extra HBM
+traffic), and feeds a dense (bk x bn) tile to the MXU.
+
+HBM traffic per weight tile: bk/m*n values (bf16) + bk/m*n offsets (int8)
+vs. bk dense rows -> (n/m)*(1 + 0.5) of dense traffic for bf16.
+For 2:4 that is 0.75x weight bytes; for 2:8, 0.375x — the memory-roofline
+term of weight-bound layers drops accordingly (core/advisor.py predicts
+when that wins).
+
+Block shapes are MXU-aligned: bm, bn multiples of 128; bk a multiple of m.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _nm_kernel(a_ref, wv_ref, wi_ref, o_ref, acc_ref, *, n: int, m: int,
+               k_steps: int, packed: bool = False):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]                        # (bm, bk)
+    wv = wv_ref[...]                      # (bk//m*n, bn)
+    if packed:
+        # bit-packed CP offsets: `8 // ceil(log2(m))` offsets per byte —
+        # metadata HBM traffic shrinks by the same factor
+        from repro.sparsity.nm import unpack_offsets
+        wi = unpack_offsets(wi_ref[...], m, wv.shape[0])
+    else:
+        wi = wi_ref[...]                  # (bk//m*n, bn) int8 offsets
+
+    # decompress in VMEM: scatter the n kept values of each m-block into
+    # their dense rows via a one-hot compare (VPU-friendly, no gather)
+    g = wv.shape[0] // n                  # m-blocks per K tile
+    bn = wv.shape[1]
+    vals = wv.reshape(g, n, bn)
+    offs = wi.reshape(g, n, bn).astype(jnp.int32)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (g, n, m, bn), 2)
+    onehot = (offs[:, :, None, :] == pos).astype(wv.dtype)
+    dense = (vals[:, :, None, :] * onehot).sum(axis=1)     # (g, m, bn)
+    dense = dense.reshape(g * m, bn)                       # (bk, bn)
+
+    acc_ref[...] += jax.lax.dot(a, dense,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _out():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def nm_spmm_kernel(a: jax.Array, w_vals: jax.Array, w_idx: jax.Array, *,
+                   n: int = 2, m: int = 4, bm: int = 128, bk: int = 128,
+                   bn: int = 128, interpret: bool = False,
+                   packed: bool = False) -> jax.Array:
+    """a: (M, K) x packed N:M weights (K//m*n, N) -> (M, N) f32.
+
+    packed=True: w_idx is bit-packed uint8 (K//m*n // per, N) with
+    per = 8 // ceil(log2(m)) offsets per byte (see sparsity.nm)."""
+    M, K = a.shape
+    Kc, N = w_vals.shape
+    assert Kc * m == K * n, f"packed rows {Kc} inconsistent with K={K}"
+    assert K % bk == 0 and bk % m == 0 and M % bm == 0 and N % bn == 0
+    k_steps = K // bk
+    bkc = bk // m * n                     # compressed rows per K tile
+    if packed:
+        from repro.sparsity.nm import offsets_bits
+        per = 8 // offsets_bits(m)
+        assert bkc % per == 0
+        bki = bkc // per
+    else:
+        bki = bkc
+
+    grid = (M // bm, N // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_nm_kernel, n=n, m=m, k_steps=k_steps,
+                          packed=packed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bkc, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bki, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, w_vals, w_idx)

@@ -1,0 +1,38 @@
+"""jit'd public wrapper for the N:M structured-sparse matmul."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import nm_spmm_kernel
+from .ref import nm_spmm_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("n", "m", "bm", "bk", "bn",
+                                   "interpret", "packed"))
+def nm_spmm(a, w_vals, w_idx, *, n: int = 2, m: int = 4, bm: int = 128,
+            bk: int = 128, bn: int = 128, interpret: bool | None = None,
+            packed: bool = False):
+    """A (M,K) @ unpack(w_vals, w_idx) -> (M,N) f32.
+
+    interpret defaults to True on CPU (Pallas TPU kernels validate via the
+    interpreter there) and False on real TPU.  packed=True consumes
+    bit-packed offsets (sparsity.nm.pack_offsets) — the full-compression
+    CP layout.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    bm = min(bm, a.shape[0])
+    bn = min(bn, w_vals.shape[1])
+    bk = min(bk, a.shape[1])
+    return nm_spmm_kernel(a, w_vals, w_idx, n=n, m=m, bm=bm, bk=bk, bn=bn,
+                          interpret=interpret, packed=packed)
+
+
+__all__ = ["nm_spmm", "nm_spmm_ref"]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the N:M structured-sparse matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparsity.nm import unpack_nm_with
+
+
+def nm_spmm_ref(a: jax.Array, w_vals: jax.Array, w_idx: jax.Array,
+                n: int, m: int) -> jax.Array:
+    """a: (M, K); w_vals/w_idx: (K//m*n, N) packed N:M weights.
+    Returns a @ W_dense in f32."""
+    w = unpack_nm_with(w_vals, w_idx, n, m)
+    return jnp.dot(a.astype(jnp.float32), w.astype(jnp.float32))

@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init), which is why __future__ imports are absent.
+
+DOC = """Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) cell, lower + compile the relevant
+step (train_step / prefill / decode) on the production mesh — single-pod
+16x16 and multi-pod 2x16x16 — and record memory analysis, FLOPs/bytes and
+the collective traffic parsed from the HLO.  Results are cached as JSON in
+results/dryrun/ and consumed by launch/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (SHAPES, cell_applicable, input_specs,
+                                make_decode_step, make_prefill_step,
+                                make_train_step)
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+# ----------------------------------------------------------------------
+# HLO collective parsing (cost_analysis has no collective bytes)
+# ----------------------------------------------------------------------
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b(f32|f16|bf16|s32|u32|s8|u8|pred|f64|s64|u64)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "f16": 2, "bf16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum output-shape bytes of every collective op in the HLO."""
+    out: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        opm = re.search(r"\b(" + "|".join(_COLLECTIVES) + r")"
+                        r"(?:-start|-done)?\(", rhs)
+        if not opm:
+            continue
+        if rhs.find("-done(") >= 0:
+            continue  # avoid double counting start/done pairs
+        op = opm.group(1)
+        # bytes = sum of result-tuple shapes before the op name
+        head = rhs[:opm.start()]
+        nbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(head):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _BYTES[dt]
+        out[op] += nbytes
+        out["count"] += 1
+    return out
+
+
+# ----------------------------------------------------------------------
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             verbose: bool = True, policy: str = "tp",
+             remat_policy: str = "full", variant: str = "",
+             cfg_overrides: dict | None = None) -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "params": cfg.param_count(), "variant": variant,
+           "policy": policy, "remat_policy": remat_policy}
+    if not ok:
+        rec |= {"status": "skipped", "reason": why}
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        with mesh:
+            specs = input_specs(cfg, shape, mesh, policy=policy)
+            if shape.kind == "train":
+                fn = make_train_step(cfg, remat_policy=remat_policy)
+                args = (specs["params"], specs["opt_state"],
+                        specs["batch"])
+            elif shape.kind == "prefill":
+                fn = make_prefill_step(cfg, S_max=shape.seq + 128)
+                args = (specs["params"], specs["batch"])
+            else:
+                fn = make_decode_step(cfg)
+                args = (specs["params"], specs["cache"],
+                        specs["batch"]["token"], specs["pos"])
+            lowered = jax.jit(fn).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            # collectives appear only after SPMD partitioning, and XLA's
+            # cost_analysis counts while bodies once -> use the scan-aware
+            # analyzer on the post-compile HLO
+            from repro.launch.hloanalysis import analyze
+            hc = analyze(compiled.as_text())
+            coll = dict(hc.collective_bytes)
+            coll["count"] = hc.collective_count
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+    except Exception as e:  # noqa: BLE001 — record, don't crash the sweep
+        rec |= {"status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {mesh_kind}: {e}")
+        return rec
+
+    def g(obj, attr):
+        v = getattr(obj, attr, None)
+        return float(v) if v is not None else None
+
+    cost = cost or {}
+    rec |= {
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        # scan-aware per-device numbers (trip counts applied)
+        "dot_flops": hc.dot_flops,
+        "dot_bytes": hc.dot_bytes,
+        "while_trips": hc.while_trips[:40],
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": g(mem, "argument_size_in_bytes"),
+            "output_bytes": g(mem, "output_size_in_bytes"),
+            "temp_bytes": g(mem, "temp_size_in_bytes"),
+            "peak_bytes": g(mem, "peak_memory_in_bytes"),
+        },
+    }
+    if verbose:
+        tb = rec["memory"]["temp_bytes"] or 0
+        print(f"[ OK ] {arch:24s} {shape_name:12s} {mesh_kind:6s} "
+              f"flops={rec['flops'] or 0:.3g} "
+              f"temp={tb / 2 ** 30:.2f}GiB "
+              f"coll={sum(v for k, v in coll.items() if k != 'count') / 2 ** 30:.2f}GiB "
+              f"({t_lower:.0f}s lower, {t_compile:.0f}s compile)")
+    return rec
+
+
+def save(rec: dict) -> pathlib.Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{rec['variant']}" if rec.get("variant") else ""
+    path = RESULTS / (f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+                      f"{suffix}.json")
+    path.write_text(json.dumps(rec, indent=1))
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCH_NAMES:
+            for s in SHAPES:
+                for m in meshes:
+                    cells.append((a, s, m))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = 0
+    for a, s, m in cells:
+        path = RESULTS / f"{a}__{s}__{m}.json"
+        if args.skip_existing and path.exists():
+            st = json.loads(path.read_text()).get("status")
+            if st in ("ok", "skipped"):
+                continue
+        rec = run_cell(a, s, m)
+        save(rec)
+        failures += rec["status"] == "error"
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

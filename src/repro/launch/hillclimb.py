@@ -1,0 +1,68 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Perf hillclimb runner: executes the §Perf iterations for the three
+selected cells at full production-mesh scale and records before/after
+roofline terms (EXPERIMENTS.md §Perf).
+
+Cells (chosen from the baseline roofline table):
+  A qwen2-0.5b   x train_4k   — worst meaningful roofline fraction (1.3%)
+  B command-r-35b x train_4k  — most collective-bound (12.7s, 100% coll)
+  C command-r-35b x decode_32k — paper-technique representative (weight
+                                 streaming; N:M format SAF target)
+
+  PYTHONPATH=src python -m repro.launch.hillclimb [cellA cellB ...]
+"""
+
+import json
+import sys
+
+from repro.launch.dryrun import run_cell, save
+
+EXPERIMENTS = {
+    # cell A: drop TP entirely for the small model
+    "A1": dict(arch="qwen2-0.5b", shape_name="train_4k",
+               mesh_kind="single", policy="dp_only", variant="dp_only"),
+    # cell B iteration 1: save dot results -> backward pass skips the
+    # forward recompute AND its TP all-reduces
+    "B1": dict(arch="command-r-35b", shape_name="train_4k",
+               mesh_kind="single", remat_policy="dots",
+               variant="remat_dots"),
+    # cell B iteration 2 (recorded refutation at reduced scale): fused
+    # parallel-block projection — re-measured at full scale
+    "B2": dict(arch="command-r-35b", shape_name="train_4k",
+               mesh_kind="single", cfg_overrides={"fused_proj": True},
+               variant="fused_proj"),
+    # cell B iteration 3: combine the winner(s)
+    "B3": dict(arch="command-r-35b", shape_name="train_4k",
+               mesh_kind="single", remat_policy="dots", policy="dp_only",
+               variant="remat_dots_dp"),
+    # cell C iteration 1: KV cache sequence-sharded (kv=8 heads do not
+    # divide the 16-way model axis -> baseline replicates the cache)
+    "C1": dict(arch="command-r-35b", shape_name="decode_32k",
+               mesh_kind="single", policy="kv_seq", variant="kv_seq"),
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(EXPERIMENTS)
+    for name in names:
+        exp = EXPERIMENTS[name]
+        print(f"--- hillclimb {name}: {exp} ---", flush=True)
+        rec = run_cell(**exp)
+        save(rec)
+        if rec["status"] == "ok":
+            coll = sum(v for k, v in rec["collectives"].items()
+                       if k != "count")
+            print(f"    dot_flops={rec['dot_flops']:.4g} "
+                  f"dot_bytes={rec['dot_bytes']:.4g} "
+                  f"coll_bytes={coll:.4g}", flush=True)
+        else:
+            print(f"    {rec['status']}: {rec.get('error', '')[:300]}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Three-term roofline analysis from the compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_chip   / 197 TFLOP/s (bf16)
+    memory     = HLO_bytes_per_chip   / 819 GB/s HBM
+    collective = coll_bytes_per_chip  / 50 GB/s ICI link
+
+All three use the SCAN-AWARE per-device numbers from hloanalysis (XLA's
+own cost_analysis counts while bodies once — see launch/hloanalysis.py);
+`dot_bytes` (operands+results of every matmul, trip-scaled) is the HBM
+proxy.  MODEL_FLOPS = 6·N·D for training (2·N·D prefill, 2·N per token
+decode), with N_active for MoE.  The ratio MODEL_FLOPS/HLO_FLOPs exposes
+remat/redundancy waste (>1 means HLO under-counts non-dot work; <1 means
+recompute/attention overhead).
+
+  PYTHONPATH=src python -m repro.launch.roofline            # table
+  PYTHONPATH=src python -m repro.launch.roofline --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch.steps import SHAPES, VLM_PATCHES
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+CHIPS = 256                  # single-pod roofline (16 x 16)
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results"
+
+
+def active_params(cfg) -> int:
+    """Parameters touched per token (MoE: shared + top_k experts)."""
+    total = cfg.param_count()
+    if not cfg.moe:
+        return total
+    m = cfg.moe
+    routed = cfg.num_layers // m.every * m.num_experts * 3 * \
+        cfg.d_model * m.expert_d_ff
+    active_routed = routed * m.top_k / m.num_experts
+    return int(total - routed + active_routed)
+
+
+def model_flops_per_chip(cfg, shape) -> float:
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n_active * tokens / CHIPS
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n_active * tokens / CHIPS
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.batch / CHIPS
+
+
+def cell_roofline(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    flops = rec.get("dot_flops") or rec.get("flops") or 0.0
+    dbytes = rec.get("dot_bytes") or rec.get("bytes_accessed") or 0.0
+    coll = rec.get("collectives", {})
+    cbytes = sum(v for k, v in coll.items() if k != "count")
+
+    t_comp = flops / PEAK_FLOPS
+    t_mem = dbytes / HBM_BW
+    t_coll = cbytes / ICI_BW
+    dom = max((t_comp, "compute"), (t_mem, "memory"),
+              (t_coll, "collective"))[1]
+    total = max(t_comp, t_mem, t_coll)
+    mf = model_flops_per_chip(cfg, shape)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops": flops,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / total if total else 0.0,
+        "step_lower_bound_s": total,
+    }
+
+
+_ADVICE = {
+    "compute": ("compute-bound: reduce recompute (remat policy), use the "
+                "N:M kernel only if accuracy budget allows — MXU is the "
+                "roof"),
+    "memory": ("HBM-bound: compress weights (nm_spmm CP format), fuse "
+               "ops, increase arithmetic intensity via larger per-chip "
+               "batch"),
+    "collective": ("collective-bound: lower TP degree / shard batch over "
+                   "the model axis, overlap collectives with compute, "
+                   "int8-compress DP all-reduces"),
+}
+
+
+def build_table(mesh: str = "single") -> list[dict]:
+    rows = []
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            p = RESULTS / "dryrun" / f"{arch}__{shape}__{mesh}.json"
+            if not p.exists():
+                continue
+            rec = json.loads(p.read_text())
+            if rec["status"] == "skipped":
+                rows.append({"arch": arch, "shape": shape,
+                             "skipped": rec["reason"]})
+                continue
+            r = cell_roofline(rec)
+            if r:
+                r["advice"] = _ADVICE[r["dominant"]]
+                rows.append(r)
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> str:
+    out = [f"{'arch':>24} {'shape':>12} {'compute':>10} {'memory':>10} "
+           f"{'collective':>10} {'dominant':>10} {'useful':>7} "
+           f"{'roofline%':>9}"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"{r['arch']:>24} {r['shape']:>12} "
+                       f"{'- skipped: sub-quadratic-only shape -':^50}")
+            continue
+        out.append(
+            f"{r['arch']:>24} {r['shape']:>12} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['dominant']:>10} {r['useful_ratio']:7.2f} "
+            f"{100 * r['roofline_fraction']:8.1f}%")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    rows = build_table(args.mesh)
+    print(fmt_table(rows))
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(rows, indent=1))
+    ok = [r for r in rows if "skipped" not in r]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        collb = max(ok, key=lambda r: r["collective_s"]
+                    / max(1e-12, r["step_lower_bound_s"]))
+        print(f"\nworst roofline fraction: {worst['arch']} x "
+              f"{worst['shape']} ({100*worst['roofline_fraction']:.1f}%)")
+        print(f"most collective-bound:   {collb['arch']} x "
+              f"{collb['shape']} "
+              f"(coll {collb['collective_s']:.3f}s of "
+              f"{collb['step_lower_bound_s']:.3f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Sharding resolution: turn the models' abstract PartitionSpecs (axis
+names "data"/"model") into mesh-specific NamedShardings, replacing "data"
+with ("pod","data") on multi-pod meshes and dropping axes that do not
+divide the corresponding dimension (replicate instead of crash)."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        return math.prod(mesh.shape[a] for a in entry)
+    return mesh.shape[entry]
+
+
+def resolve_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Map abstract spec -> concrete spec for this mesh."""
+    if not isinstance(spec, P):
+        spec = P()
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, entries):
+        if e == "data":
+            e = dp_axes(mesh) if len(dp_axes(mesh)) > 1 else "data"
+        if e is not None and dim % _axis_size(mesh, e) != 0:
+            # try just "data" before giving up
+            if isinstance(e, tuple) and dim % mesh.shape["data"] == 0:
+                e = "data"
+            else:
+                e = None
+        out.append(e)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(spec: P, shape: tuple[int, ...],
+                   mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(spec, shape, mesh))
+
+
+def shard_tree(shapes: Any, specs: Any, mesh: Mesh) -> Any:
+    """ShapeDtypeStruct tree + abstract spec tree -> ShapeDtypeStruct tree
+    with attached NamedShardings (ready for jit.lower)."""
+    def one(sd, spec):
+        return jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype,
+            sharding=named_sharding(spec, sd.shape, mesh))
+
+    return jax.tree.map(one, shapes, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sharding_tree(shapes: Any, specs: Any, mesh: Mesh) -> Any:
+    """Spec tree -> NamedSharding tree (for jit in_shardings)."""
+    return jax.tree.map(
+        lambda sd, spec: named_sharding(spec, sd.shape, mesh),
+        shapes, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh, batch: int) -> P:
+    """Global-batch leading axis sharding (replicate if indivisible)."""
+    axes = dp_axes(mesh)
+    size = math.prod(mesh.shape[a] for a in axes)
+    if batch % size == 0:
+        return P(axes if len(axes) > 1 else axes[0])
+    if batch % mesh.shape["data"] == 0:
+        return P("data")
+    return P()

@@ -1,0 +1,273 @@
+"""Step builders: abstract shapes + shardings + jit-able step functions
+for training, prefill and decode — shared by dryrun.py, train.py and
+serve.py.
+
+`abstract_state` uses jax.eval_shape with a side-channel spec capture, so
+even the 76B-parameter configs are described without allocating a byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import ModelConfig, get_api, lm_loss_from_hidden
+from repro.models import transformer as T
+from repro.optim import adamw_init, adamw_update, zero1_specs
+from .mesh import dp_axes
+from .sharding import batch_spec, resolve_spec, shard_tree
+
+# ----------------------------------------------------------------------
+# The assigned input-shape set (one per cell kind)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+#: number of stub patch-embedding positions prepended for the VLM arch
+VLM_PATCHES = 256
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (DESIGN.md §Arch-applic.)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 500k-token decode KV/attention "
+                       "is quadratic-cost — skipped per assignment note")
+    return True, ""
+
+
+# ----------------------------------------------------------------------
+# Abstract params / optimizer / cache with specs
+# ----------------------------------------------------------------------
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct tree, abstract spec tree) without allocation."""
+    api = get_api(cfg)
+    captured: list = []
+
+    def f(key):
+        p, s = api.init(cfg, key)
+        captured.append(s)
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, captured[0]
+
+
+def abstract_cache(cfg: ModelConfig, B: int, S: int):
+    """Cache/state ShapeDtypeStructs + spec tree for decode."""
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.enc_dec:
+        S_dec = cfg.dec_max_len
+        kv = lambda s: jax.ShapeDtypeStruct(
+            (cfg.num_layers, B, s, cfg.num_kv_heads, cfg.head_dim), dtype)
+        shapes = ((kv(S_dec), kv(S_dec)), (kv(S), kv(S)))
+        self_spec = P(None, "data", None, "model", None)
+        cross_spec = P(None, "data", "model", None, None)
+        specs = ((self_spec, self_spec), (cross_spec, cross_spec))
+        return shapes, specs
+    if cfg.family == "ssm":
+        shapes = jax.eval_shape(
+            lambda: T.xlstm_init_state(cfg, B, dtype))
+        m_spec = (P(None, "data", None, "model"),
+                  P(None, "data", None, None, None))
+        s_spec = (P(None, "data", "model"),) * 4
+        return shapes, (m_spec, s_spec)
+    if cfg.family == "hybrid":
+        shapes = jax.eval_shape(
+            lambda: T.hybrid_init_state(cfg, B, S, dtype))
+        mamba_spec = (P(None, None, "data", None, "model"),
+                      P(None, None, "data", "model", None, None))
+        kv_spec = (P(None, "data", None, "model", None),) * 2
+        return shapes, (mamba_spec, kv_spec)
+    shapes = jax.eval_shape(lambda: T.lm_init_cache(cfg, B, S, dtype))
+    return shapes, T.cache_specs(cfg)
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeSpec):
+    """Training/prefill input ShapeDtypeStructs + specs."""
+    B, S = shape.batch, shape.seq
+    i32 = jnp.dtype(jnp.int32)
+    dtype = jnp.dtype(cfg.dtype)
+    bs = P("data")  # resolved to ("pod","data") by resolve_spec
+    if shape.kind == "train":
+        if cfg.enc_dec:
+            return ({"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                    dtype),
+                     "dec_tokens": jax.ShapeDtypeStruct(
+                         (B, cfg.dec_max_len), i32),
+                     "targets": jax.ShapeDtypeStruct(
+                         (B, cfg.dec_max_len), i32)},
+                    {"frames": bs, "dec_tokens": bs, "targets": bs})
+        if cfg.frontend == "vision_stub":
+            S_txt = S - VLM_PATCHES
+            return ({"patches": jax.ShapeDtypeStruct(
+                        (B, VLM_PATCHES, cfg.d_model), dtype),
+                     "tokens": jax.ShapeDtypeStruct((B, S_txt), i32),
+                     "targets": jax.ShapeDtypeStruct((B, S_txt), i32)},
+                    {"patches": bs, "tokens": bs, "targets": bs})
+        return ({"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "targets": jax.ShapeDtypeStruct((B, S), i32)},
+                {"tokens": bs, "targets": bs})
+    if shape.kind == "prefill":
+        if cfg.enc_dec:
+            return ({"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                    dtype),
+                     "dec_tokens": jax.ShapeDtypeStruct(
+                         (B, cfg.dec_max_len), i32)},
+                    {"frames": bs, "dec_tokens": bs})
+        if cfg.frontend == "vision_stub":
+            return ({"patches": jax.ShapeDtypeStruct(
+                        (B, VLM_PATCHES, cfg.d_model), dtype),
+                     "tokens": jax.ShapeDtypeStruct((B, S - VLM_PATCHES),
+                                                    i32)},
+                    {"patches": bs, "tokens": bs})
+        return ({"tokens": jax.ShapeDtypeStruct((B, S), i32)},
+                {"tokens": bs})
+    # decode: one token with a cache of length S
+    return ({"token": jax.ShapeDtypeStruct((B, 1), i32)}, {"token": bs})
+
+
+# ----------------------------------------------------------------------
+# Step functions
+# ----------------------------------------------------------------------
+def make_loss_fn(cfg: ModelConfig, remat_policy: str = "full"):
+    api = get_api(cfg)
+    kw = {}
+    if not cfg.enc_dec and cfg.family in ("dense", "moe", "vlm"):
+        kw["remat_policy"] = remat_policy
+
+    def loss_fn(params, batch):
+        if cfg.enc_dec:
+            hidden, aux = api.forward_train(
+                params, (batch["frames"], batch["dec_tokens"]), cfg)
+            tgt = batch["targets"]
+        elif cfg.frontend == "vision_stub":
+            hidden, aux = T.lm_forward_train(
+                params, batch["tokens"], cfg,
+                prefix_embeds=batch["patches"], **kw)
+            hidden = hidden[:, VLM_PATCHES:, :]
+            tgt = batch["targets"]
+        else:
+            hidden, aux = api.forward_train(params, batch["tokens"], cfg,
+                                            **kw)
+            tgt = batch["targets"]
+        return lm_loss_from_hidden(params, hidden, tgt, cfg) + 0.01 * aux
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4,
+                    remat_policy: str = "full"):
+    loss_fn = make_loss_fn(cfg, remat_policy)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params,
+                                                lr=lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, S_max: int):
+    api = get_api(cfg)
+
+    def prefill(params, batch):
+        if cfg.enc_dec:
+            return api.prefill(params, (batch["frames"],
+                                        batch["dec_tokens"]), cfg, S_max)
+        if cfg.frontend == "vision_stub":
+            return T.lm_prefill(params, batch["tokens"], cfg, S_max,
+                                prefix_embeds=batch["patches"])
+        return api.prefill(params, batch["tokens"], cfg, S_max)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    api = get_api(cfg)
+
+    def decode(params, cache, token, pos):
+        return api.decode_step(params, token, cache, pos, cfg)
+
+    return decode
+
+
+# ----------------------------------------------------------------------
+# Fully-sharded abstract inputs for one (arch x shape x mesh) cell
+# ----------------------------------------------------------------------
+def _strip_model(spec_tree):
+    """dp_only policy: drop every 'model' entry (replicate params)."""
+    def one(spec):
+        if not isinstance(spec, P):
+            return spec
+        return P(*[None if e == "model" else e for e in spec])
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_all_axes(spec_tree, mesh):
+    """dp_only policy: shard the batch over EVERY mesh axis."""
+    axes = tuple(mesh.axis_names)
+
+    def one(spec):
+        if not isinstance(spec, P) or not len(spec):
+            return spec
+        return P(axes, *list(spec)[1:])
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                policy: str = "tp"):
+    """Everything `.lower()` needs: a dict of sharded ShapeDtypeStructs.
+
+    policy: 'tp' (default: tensor parallel over the model axis) or
+    'dp_only' (replicate params, shard the batch over all axes — the
+    right call for small models where TP collectives dominate) or
+    'kv_seq' (tp + decode KV cache sharded along sequence instead of
+    kv-heads — for GQA archs whose few KV heads do not divide the model
+    axis)."""
+    p_shapes, p_specs = abstract_params(cfg)
+    if policy == "dp_only":
+        p_specs = _strip_model(p_specs)
+    params = shard_tree(p_shapes, p_specs, mesh)
+    batch_shapes, batch_specs = abstract_batch(cfg, shape)
+    if policy == "dp_only":
+        batch_specs = _batch_all_axes(batch_specs, mesh)
+    batch = shard_tree(batch_shapes, batch_specs, mesh)
+    out = {"params": params, "batch": batch}
+    if shape.kind == "train":
+        o_shapes = jax.eval_shape(adamw_init, p_shapes)
+        mu_specs = zero1_specs(p_specs, p_shapes,
+                               data_size=mesh.shape["data"])
+        from repro.optim.adamw import AdamWState
+        opt_specs = AdamWState(mu=mu_specs, nu=mu_specs, step=P())
+        out["opt_state"] = shard_tree(o_shapes, opt_specs, mesh)
+    if shape.kind == "decode":
+        c_shapes, c_specs = abstract_cache(cfg, shape.batch, shape.seq)
+        if policy == "kv_seq" and not cfg.mla and \
+                cfg.family in ("dense", "moe", "vlm"):
+            c_specs = (P(None, "data", "model", None, None),
+                       P(None, "data", "model", None, None))
+        elif policy == "dp_only":
+            c_specs = _strip_model(c_specs)
+        out["cache"] = shard_tree(c_shapes, c_specs, mesh)
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out

@@ -1,0 +1,5 @@
+from .config import HybridConfig, MLAConfig, MoEConfig, ModelConfig
+from .transformer import ModelApi, get_api, lm_loss_from_hidden
+
+__all__ = ["HybridConfig", "MLAConfig", "MoEConfig", "ModelConfig",
+           "ModelApi", "get_api", "lm_loss_from_hidden"]

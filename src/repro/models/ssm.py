@@ -1,0 +1,284 @@
+"""State-space / recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+All three share one computational core — a gated linear recurrence over
+outer-product states:
+
+    H_t = a_t * H_{t-1} + u_t k_t^T          (state: (heads, d_v, d_k))
+    y_t = H_t q_t
+
+Training/prefill uses an exact *chunkwise-parallel* form (intra-chunk
+attention-like matmuls + an inter-chunk scan), which is the TPU-friendly
+formulation (MXU-heavy, O(S * Q) memory).  Decode is the O(1)-per-token
+recurrent step — this is what makes the ssm/hybrid architectures eligible
+for the long_500k shape.
+
+mLSTM's normalizer n_t is folded in by augmenting v with a constant
+channel, so the same core serves both Mamba2 and mLSTM.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import MODEL, _init, apply_norm
+
+
+# ----------------------------------------------------------------------
+# Chunked gated linear recurrence (exact)
+# ----------------------------------------------------------------------
+def chunked_recurrence(a, q, k, v, h0, chunk: int = 128):
+    """a: (B,S,H) per-step decay in (0,1]; q,k: (B,S,H,Dk); v: (B,S,H,Dv);
+    h0: (B,H,Dv,Dk).  Returns y: (B,S,H,Dv), h_final."""
+    B, S, H, Dk = k.shape
+    Dv = v.shape[-1]
+    Q = min(chunk, S)
+    n = S // Q
+    la = jnp.log(jnp.clip(a, 1e-20, 1.0))                   # (B,S,H)
+
+    def reshape_c(x):
+        return x.reshape(B, n, Q, *x.shape[2:]).transpose(
+            1, 0, 2, *range(3, x.ndim + 1))
+
+    laq, qq, kq, vq = map(reshape_c, (la, q, k, v))          # (n,B,Q,...)
+
+    def body(h, xs):
+        lac, qc, kc, vc = xs                                 # (B,Q,...)
+        s = jnp.cumsum(lac, axis=1)                          # (B,Q,H)
+        total = s[:, -1:, :]                                 # (B,1,H)
+        # inter-chunk: y_t += (q_t * exp(s_t)) . h
+        q_dec = qc * jnp.exp(s)[..., None].astype(qc.dtype)
+        y_inter = jnp.einsum("bqhk,bhvk->bqhv", q_dec, h)
+        # intra-chunk: masked decay-weighted attention
+        gap = s[:, :, None, :] - s[:, None, :, :]            # (B,Q,Q,H)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        w = jnp.where(mask[None, :, :, None], jnp.exp(gap), 0.0)
+        scores = jnp.einsum("bqhk,bjhk->bqjh", qc, kc,
+                            preferred_element_type=jnp.float32)
+        y_intra = jnp.einsum("bqjh,bjhv->bqhv",
+                             (scores * w).astype(vc.dtype), vc)
+        # state update: h' = exp(total) h + sum_j exp(total - s_j) v_j k_j^T
+        k_dec = kc * jnp.exp(total - s)[..., None].astype(kc.dtype)
+        h = (h * jnp.exp(total[:, 0, :])[:, :, None, None].astype(h.dtype)
+             + jnp.einsum("bjhv,bjhk->bhvk", vc, k_dec))
+        return h, y_inter + y_intra
+
+    h, y = jax.lax.scan(body, h0, (laq, qq, kq, vq))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dv)
+    return y, h
+
+
+def recurrence_step(a, q, k, v, h):
+    """One decode step.  a: (B,H); q,k: (B,H,Dk); v: (B,H,Dv);
+    h: (B,H,Dv,Dk)."""
+    h = h * a[..., None, None].astype(h.dtype) \
+        + jnp.einsum("bhv,bhk->bhvk", v, k)
+    y = jnp.einsum("bhvk,bhk->bhv", h, q)
+    return y, h
+
+
+# ----------------------------------------------------------------------
+# Causal depthwise conv1d with cache
+# ----------------------------------------------------------------------
+def causal_conv(x, w, cache=None):
+    """x: (B,S,D); w: (K,D) depthwise.  cache: (B,K-1,D) previous inputs."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    new_cache = xp[:, -(K - 1):, :] if K > 1 else pad
+    return jax.nn.silu(out), new_cache
+
+
+# ----------------------------------------------------------------------
+# Mamba2 block
+# ----------------------------------------------------------------------
+def _mamba_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    head_dim = 64
+    heads = max(1, d_in // head_dim)
+    return d_in, heads, head_dim
+
+
+def init_mamba2(cfg: ModelConfig, key):
+    d = cfg.d_model
+    d_in, H, hd = _mamba_dims(cfg)
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    p = {
+        # packed in-projection: [z, x, B, C, dt]
+        "w_in": _init(ks[0], (d, 2 * d_in + 2 * n + H)),
+        "conv_w": jnp.ones((cfg.ssm_conv, d_in + 2 * n)) / cfg.ssm_conv,
+        "A_log": jnp.zeros((H,)) + math.log(0.5),
+        "dt_bias": jnp.zeros((H,)),
+        "D": jnp.ones((H,)),
+        "out_norm": jnp.ones((d_in,)),
+        "w_out": _init(ks[1], (d_in, d)),
+    }
+    spec = {
+        "w_in": P(None, MODEL), "conv_w": P(None, MODEL),
+        "A_log": P(None), "dt_bias": P(None), "D": P(None),
+        "out_norm": P(MODEL), "w_out": P(MODEL, None),
+    }
+    return p, spec
+
+
+def _mamba_gates(p, u, cfg):
+    d_in, H, hd = _mamba_dims(cfg)
+    n = cfg.ssm_state
+    z = u[..., :d_in]
+    xbc = u[..., d_in:2 * d_in + 2 * n]
+    dt = u[..., 2 * d_in + 2 * n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-jnp.exp(p["A_log"])[None, None, :] * dt)   # (B,S,H)
+    return z, xbc, dt, a
+
+
+def mamba2_fwd(p, x, cfg: ModelConfig, state=None):
+    """state: (conv_cache, h) or None.  Returns (y, new_state)."""
+    B, S, d = x.shape
+    d_in, H, hd = _mamba_dims(cfg)
+    n = cfg.ssm_state
+    u = x @ p["w_in"].astype(x.dtype)
+    z, xbc, dt, a = _mamba_gates(p, u, cfg)
+    conv_cache = None if state is None else state[0]
+    xbc, new_conv = causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                conv_cache)
+    xs = xbc[..., :d_in].reshape(B, S, H, hd)
+    Bm = xbc[..., d_in:d_in + n]
+    Cm = xbc[..., d_in + n:]
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, n))
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, n))
+    v = xs * dt[..., None].astype(x.dtype)
+    h0 = (jnp.zeros((B, H, hd, n), x.dtype) if state is None
+          else state[1])
+    if S == 1 and state is not None:
+        y, h = recurrence_step(a[:, 0], q[:, 0], k[:, 0], v[:, 0], h0)
+        y = y[:, None]
+    else:
+        y, h = chunked_recurrence(a, q, k, v, h0)
+    y = y + xs * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, d_in)
+    y = apply_norm({"scale": p["out_norm"]}, y) * jax.nn.silu(z)
+    return y @ p["w_out"].astype(x.dtype), (new_conv, h)
+
+
+# ----------------------------------------------------------------------
+# mLSTM block (xLSTM): matrix memory + exp gating; normalizer via
+# augmented v channel.
+# ----------------------------------------------------------------------
+def init_mlstm(cfg: ModelConfig, key):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H, hd = cfg.num_heads, d_in // cfg.num_heads
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": _init(ks[0], (d, 2 * d_in)),          # (xi, z)
+        "conv_w": jnp.ones((cfg.ssm_conv, d_in)) / cfg.ssm_conv,
+        "w_qkv": _init(ks[1], (d_in, 3 * d_in)),
+        "w_if": _init(ks[2], (d_in, 2 * H)) ,
+        "out_norm": jnp.ones((d_in,)),
+        "w_down": _init(jax.random.fold_in(key, 9), (d_in, d)),
+    }
+    spec = {"w_up": P(None, MODEL), "conv_w": P(None, MODEL),
+            "w_qkv": P(MODEL, None), "w_if": P(MODEL, None),
+            "out_norm": P(MODEL), "w_down": P(MODEL, None)}
+    return p, spec
+
+
+def mlstm_fwd(p, x, cfg: ModelConfig, state=None):
+    B, S, d = x.shape
+    d_in = cfg.ssm_expand * d
+    H = cfg.num_heads
+    hd = d_in // H
+    up = x @ p["w_up"].astype(x.dtype)
+    xi, z = up[..., :d_in], up[..., d_in:]
+    conv_cache = None if state is None else state[0]
+    xc, new_conv = causal_conv(xi, p["conv_w"].astype(x.dtype), conv_cache)
+    qkv = xc @ p["w_qkv"].astype(x.dtype)
+    q = qkv[..., :d_in].reshape(B, S, H, hd) / math.sqrt(hd)
+    k = qkv[..., d_in:2 * d_in].reshape(B, S, H, hd) / math.sqrt(hd)
+    v = qkv[..., 2 * d_in:].reshape(B, S, H, hd)
+    gates = (xc @ p["w_if"].astype(x.dtype)).astype(jnp.float32)
+    i_g = jnp.exp(-jax.nn.softplus(-gates[..., :H]))         # in (0,1)
+    f_g = jax.nn.sigmoid(gates[..., H:] + 4.0)               # forget ~1
+    # augment v with ones channel -> last row of the state is the
+    # normalizer n_t = f n + i k
+    v_aug = jnp.concatenate(
+        [v * i_g[..., None].astype(x.dtype),
+         jnp.ones((B, S, H, 1), x.dtype) * i_g[..., None].astype(x.dtype)],
+        axis=-1)
+    h0 = (jnp.zeros((B, H, hd + 1, hd), x.dtype) if state is None
+          else state[1])
+    if S == 1 and state is not None:
+        y_aug, h = recurrence_step(f_g[:, 0], q[:, 0], k[:, 0],
+                                   v_aug[:, 0], h0)
+        y_aug = y_aug[:, None]
+    else:
+        y_aug, h = chunked_recurrence(f_g, q, k, v_aug, h0)
+    num, den = y_aug[..., :hd], y_aug[..., hd:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = y.reshape(B, S, d_in)
+    y = apply_norm({"scale": p["out_norm"]}, y) * jax.nn.silu(z)
+    return y @ p["w_down"].astype(x.dtype), (new_conv, h)
+
+
+# ----------------------------------------------------------------------
+# sLSTM block: scalar memory, strictly sequential scan (recurrent mixing)
+# ----------------------------------------------------------------------
+def init_slstm(cfg: ModelConfig, key):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_gates": _init(ks[0], (d, 4 * d)),          # i, f, z, o
+        "r_gates": _init(ks[1], (d, 4 * d)) * 0.1,    # recurrent mixing
+        "w_down": _init(ks[2], (d, d)),
+        "out_norm": jnp.ones((d,)),
+    }
+    spec = {"w_gates": P(None, MODEL), "r_gates": P(None, MODEL),
+            "w_down": P(MODEL, None), "out_norm": P(None)}
+    return p, spec
+
+
+def slstm_fwd(p, x, cfg: ModelConfig, state=None):
+    """state: (h, c, n, m) each (B, d)."""
+    B, S, d = x.shape
+    pre = x @ p["w_gates"].astype(x.dtype)                  # (B,S,4d)
+    if state is None:
+        h0 = jnp.zeros((B, d), x.dtype)
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.ones((B, d), jnp.float32)
+        m0 = jnp.zeros((B, d), jnp.float32)
+    else:
+        h0, c0, n0, m0 = state
+
+    r_w = p["r_gates"].astype(x.dtype)
+
+    def step(carry, pre_t):
+        h, c, n, m = carry
+        g = (pre_t + h @ r_w).astype(jnp.float32)
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        # exponential gating with stabilizer (xLSTM eq. 15-17)
+        log_f = -jax.nn.softplus(-gf)                        # log sigmoid
+        m_new = jnp.maximum(log_f + m, gi)
+        i_s = jnp.exp(gi - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        z_t = jnp.tanh(gz)
+        c = f_s * c + i_s * z_t
+        n = f_s * n + i_s
+        h_out = jax.nn.sigmoid(go) * (c / jnp.maximum(n, 1.0))
+        h_out = h_out.astype(x.dtype)
+        return (h_out, c, n, m_new), h_out
+
+    (h, c, n, m), ys = jax.lax.scan(step, (h0, c0, n0, m0),
+                                    pre.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2)
+    y = apply_norm({"scale": p["out_norm"]}, y)
+    return y @ p["w_down"].astype(x.dtype), (h, c, n, m)

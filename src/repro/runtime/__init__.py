@@ -1,0 +1,5 @@
+from .fault_tolerance import Heartbeat, StragglerWatchdog, elastic_mesh
+from .compression import compressed_grad_allreduce
+
+__all__ = ["Heartbeat", "StragglerWatchdog", "elastic_mesh",
+           "compressed_grad_allreduce"]

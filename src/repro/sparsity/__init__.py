@@ -1,0 +1,3 @@
+from .nm import nm_prune_dense, pack_nm, unpack_nm_with
+
+__all__ = ["nm_prune_dense", "pack_nm", "unpack_nm_with"]

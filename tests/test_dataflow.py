@@ -1,0 +1,118 @@
+"""Dataflow (Step One) traffic vs the brute-force loop-walking simulator,
+plus structural/property invariants of the reuse model."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Workload, matmul, mv, nest
+from repro.core.dataflow import analyze_dataflow, leader_tile_bounds
+from repro.core.mapping import Loop, LoopNest
+from repro.core import refsim
+from repro.core.taxonomy import SAFSpec
+
+
+def _dense_cmp(wl, mapping):
+    dense = analyze_dataflow(wl, mapping)
+    arrays = {t.name: np.ones(t.dim_sizes(wl.rank_bounds))
+              for t in wl.tensors}
+    sim = refsim.simulate(wl, mapping, SAFSpec(), arrays,
+                          [f"L{s}" for s in range(mapping.num_levels)])
+    for t in wl.tensors:
+        is_out = t.name == wl.output
+        for s in range(mapping.num_levels):
+            a, b = dense.of(t.name, s), sim.of(t.name, s)
+            if is_out:
+                model_rd = (a.writeback_words + a.rmw_read_words
+                            + a.read_words)
+                assert model_rd == pytest.approx(b.reads.dense), \
+                    (t.name, s, "reads")
+                assert a.update_words == pytest.approx(b.updates.dense), \
+                    (t.name, s, "updates")
+            else:
+                assert a.read_words == pytest.approx(b.reads.dense), \
+                    (t.name, s, "reads")
+                if s < mapping.num_levels - 1:
+                    assert a.fill_words == pytest.approx(b.fills.dense), \
+                        (t.name, s, "fills")
+
+
+def test_matmul_output_stationary():
+    wl = matmul(8, 8, 8)
+    _dense_cmp(wl, nest(2, ("m", 8, 1), ("n", 8, 0), ("k", 8, 0)))
+
+
+def test_matmul_weight_stationary_spatial():
+    wl = matmul(8, 16, 8)
+    _dense_cmp(wl, nest(2,
+                        ("k", 2, 1), ("m", 4, 1), ("n", 2, 1, "spatial"),
+                        ("n", 4, 0), ("k", 8, 0), ("m", 2, 0)))
+
+
+def test_matmul_reduction_outer_partial_evictions():
+    # k at the outermost level forces partial-sum eviction/refetch
+    wl = matmul(4, 8, 4)
+    _dense_cmp(wl, nest(2, ("k", 4, 1), ("m", 4, 1),
+                        ("n", 4, 0), ("k", 2, 0)))
+
+
+def test_mv_three_level():
+    wl = mv(16, 16)
+    _dense_cmp(wl, nest(3,
+                        ("m", 2, 2), ("k", 2, 2),
+                        ("m", 4, 1), ("k", 2, 1),
+                        ("k", 4, 0), ("m", 2, 0)))
+
+
+def test_fig10_leader_tiles():
+    """The paper's Fig. 10: the same SAF has different leader tiles under
+    different mappings."""
+    wl = matmul(4, 4, 8)
+    A, B = wl.tensor("A"), wl.tensor("B")
+    # Mapping 1: innermost k0 -> leader is a single A value
+    m1 = nest(2, ("m", 4, 1), ("n", 2, 1), ("n", 4, 1, "spatial"),
+              ("n", 2, 0), ("k", 4, 0))
+    lb1 = leader_tile_bounds(m1, 0, B, A)
+    assert A.tile_size(lb1) == 1
+    # Mapping 2: innermost m0 (irrelevant to B) -> leader is a column of A
+    m2 = nest(2, ("n", 2, 1), ("n", 4, 1, "spatial"),
+              ("n", 2, 0), ("k", 4, 0), ("m", 4, 0))
+    lb2 = leader_tile_bounds(m2, 0, B, A)
+    assert A.tile_size(lb2) == 4
+    assert lb2.get("m") == 4
+
+
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3),
+       st.integers(0, 5))
+@settings(max_examples=25, deadline=None)
+def test_traffic_invariants(lm, lk, ln, seed):
+    """Property: compute count is exact; child fills never exceed parent
+    reads; all counts non-negative."""
+    M, K, N = 2 ** lm, 2 ** lk, 2 ** ln
+    wl = matmul(M, K, N)
+    rng = np.random.default_rng(seed)
+
+    def split(x):
+        a = int(rng.choice([f for f in range(1, x + 1) if x % f == 0]))
+        return a, x // a
+
+    m1, m0 = split(M)
+    k1, k0 = split(K)
+    n1, n0 = split(N)
+    loops = [lp for lp in (Loop("m", m1, 1), Loop("k", k1, 1),
+                           Loop("n", n1, 1), Loop("n", n0, 0),
+                           Loop("k", k0, 0), Loop("m", m0, 0))
+             if lp.bound >= 1]
+    mapping = LoopNest(loops=tuple(loops), num_levels=2)
+    dense = analyze_dataflow(wl, mapping)
+    assert dense.dense_computes == M * K * N
+    for t in wl.tensors:
+        for s in range(2):
+            tl = dense.of(t.name, s)
+            assert tl.read_words >= 0 and tl.fill_words >= 0
+            assert tl.update_words >= 0 and tl.rmw_read_words >= 0
+    for t in wl.input_tensors:
+        # data served downward >= data resident below (conservation-ish)
+        assert dense.of(t.name, 1).read_words >= \
+            dense.of(t.name, 0).tile_size

@@ -1,0 +1,135 @@
+"""Pallas kernel validation: shape/dtype sweeps + property tests against
+the pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.block_mm.ops import (block_indices, block_mm_ref,
+                                        gated_mm, skip_mm)
+from repro.kernels.nm_spmm.ops import nm_spmm, nm_spmm_ref
+from repro.sparsity import nm_prune_dense, pack_nm, unpack_nm_with
+
+RNG = np.random.default_rng(7)
+
+
+# ----------------------------------------------------------------------
+# nm_spmm
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("n,m", [(2, 4), (1, 4), (2, 6), (2, 8), (4, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_nm_spmm_matches_ref(n, m, dtype):
+    M, K, N = 32, 12 * m, 64
+    a = jnp.asarray(RNG.normal(size=(M, K)), dtype)
+    w = nm_prune_dense(jnp.asarray(RNG.normal(size=(K, N)), jnp.float32),
+                       n, m)
+    wv, wi = pack_nm(w, n, m)
+    out = nm_spmm(a, wv.astype(dtype), wi, n=n, m=m, bm=32, bk=3 * m,
+                  bn=32)
+    ref = nm_spmm_ref(a, wv.astype(dtype), wi, n, m)
+    tol = 0.25 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(16, 8, 32), (32, 16, 16),
+                                      (64, 32, 64)])
+def test_nm_spmm_block_shape_sweep(bm, bk, bn):
+    n, m = 2, 4
+    M, K, N = 64, 64, 64
+    a = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+    w = nm_prune_dense(jnp.asarray(RNG.normal(size=(K, N)), jnp.float32),
+                       n, m)
+    wv, wi = pack_nm(w, n, m)
+    out = nm_spmm(a, wv, wi, n=n, m=m, bm=bm, bk=bk, bn=bn)
+    ref = nm_spmm_ref(a, wv, wi, n, m)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+@given(st.integers(0, 10_000), st.sampled_from([(2, 4), (2, 8), (1, 4)]))
+@settings(max_examples=12, deadline=None)
+def test_nm_pack_roundtrip(seed, nm):
+    """Property: pack -> unpack is the identity on N:M-pruned weights."""
+    n, m = nm
+    rng = np.random.default_rng(seed)
+    w = nm_prune_dense(jnp.asarray(rng.normal(size=(8 * m, 16)),
+                                   jnp.float32), n, m)
+    wv, wi = pack_nm(w, n, m)
+    w2 = unpack_nm_with(wv, wi, n, m)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w))
+    # compression: exactly n/m of the dense values are stored
+    assert wv.size == w.size * n // m
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_nm_prune_structure(seed):
+    """Property: every m-block of the pruned weight has <= n nonzeros."""
+    rng = np.random.default_rng(seed)
+    n, m = 2, 4
+    w = nm_prune_dense(jnp.asarray(rng.normal(size=(32, 8)), jnp.float32),
+                       n, m)
+    blocks = np.asarray(w).reshape(-1, m, 8)
+    assert ((blocks != 0).sum(axis=1) <= n).all()
+
+
+# ----------------------------------------------------------------------
+# block_mm gate/skip
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("density", [0.1, 0.5, 0.9, 1.0])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gated_and_skip_match_ref(density, dtype):
+    M, K, N = 32, 128, 128
+    bk = bn = 32
+    a = jnp.asarray(RNG.normal(size=(M, K)), dtype)
+    w = jnp.asarray(RNG.normal(size=(K, N)), dtype)
+    mask = (RNG.random((K // bk, N // bn)) < density).astype(np.int32)
+    mask[0, 0] = 1
+    jm = jnp.asarray(mask)
+    wm = w * jnp.repeat(jnp.repeat(jm.astype(w.dtype), bk, 0), bn, 1)
+    ref = block_mm_ref(a, w, jm, bk, bn)
+    tol = 0.3 if dtype == jnp.bfloat16 else 1e-4
+    g = gated_mm(a, w, jm, bm=32, bk=bk, bn=bn)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ref), atol=tol,
+                               rtol=tol)
+    ki, ji = block_indices(mask)
+    s = skip_mm(a, wm, jnp.asarray(ki), jnp.asarray(ji), bm=32, bk=bk,
+                bn=bn)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ref), atol=tol,
+                               rtol=tol)
+
+
+def test_skip_grid_is_shorter():
+    """The skip kernel's grid scales with nnz blocks (time savings), the
+    gated kernel's with all blocks (energy-only savings) — the paper's
+    central gate-vs-skip distinction, observable in the launch count."""
+    mask = np.zeros((8, 4), np.int32)
+    mask[0, :] = 1          # one nonzero block per column
+    ki, ji = block_indices(mask)
+    assert len(ki) == 4     # skip: 4 of 32 blocks visited
+
+
+@pytest.mark.parametrize("n,m", [(2, 4), (2, 8), (1, 4)])
+def test_nm_spmm_packed_offsets(n, m):
+    """Bit-packed CP offsets reach the full-compression layout bound
+    (EXPERIMENTS.md §Perf kernel iteration) and stay exact."""
+    from repro.sparsity.nm import (offsets_bits, pack_offsets,
+                                   unpack_offsets)
+    M, K, N = 32, 16 * m, 64
+    a = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+    w = nm_prune_dense(jnp.asarray(RNG.normal(size=(K, N)), jnp.float32),
+                       n, m)
+    wv, wi = pack_nm(w, n, m)
+    wip = pack_offsets(wi, m)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_offsets(wip, m, wi.shape[0])),
+        np.asarray(wi, np.int32))
+    out = nm_spmm(a, wv, wip, n=n, m=m, bm=32, bk=4 * m, bn=32,
+                  packed=True)
+    ref = nm_spmm_ref(a, wv, wi, n, m)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    # metadata bytes shrink by the packing factor
+    assert wip.size * (8 // offsets_bits(m)) == wi.size

@@ -1,0 +1,138 @@
+"""Substrate tests: data pipeline, checkpointing, fault tolerance,
+gradient compression."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, load_checkpoint,
+                              save_checkpoint)
+from repro.checkpoint.store import latest_step
+from repro.data import DataState, SyntheticLM
+from repro.runtime import (Heartbeat, StragglerWatchdog,
+                           compressed_grad_allreduce, elastic_mesh)
+
+
+# ----------------------------------------------------------------------
+# data pipeline
+# ----------------------------------------------------------------------
+def test_pipeline_deterministic_and_resumable():
+    a = SyntheticLM(1000, 32, 8, seed=3)
+    b1 = next(a)
+    b2 = next(a)
+    # resume from a fresh pipeline at step 1 reproduces batch 2 exactly
+    c = SyntheticLM(1000, 32, 8, seed=3)
+    c.restore(DataState(seed=3, step=1))
+    np.testing.assert_array_equal(next(c)["tokens"], b2["tokens"])
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_pipeline_sharding_partitions_batch():
+    full = SyntheticLM(1000, 16, 8, seed=1, num_shards=1, shard=0)
+    s0 = SyntheticLM(1000, 16, 8, seed=1, num_shards=2, shard=0)
+    s1 = SyntheticLM(1000, 16, 8, seed=1, num_shards=2, shard=1)
+    assert next(s0)["tokens"].shape[0] == 4
+    assert next(s1)["tokens"].shape[0] == 4
+    # shards draw independent streams
+    assert not np.array_equal(
+        SyntheticLM(1000, 16, 8, seed=1, num_shards=2, shard=0)
+        ._batch_at(0)["tokens"],
+        SyntheticLM(1000, 16, 8, seed=1, num_shards=2, shard=1)
+        ._batch_at(0)["tokens"])
+
+
+def test_pipeline_targets_shifted():
+    p = SyntheticLM(1000, 16, 2, seed=0)
+    b = next(p)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+# ----------------------------------------------------------------------
+# checkpointing
+# ----------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
+            "b": {"c": jnp.ones((4,), jnp.float32)}}
+    save_checkpoint(tmp_path, 7, tree, extra={"step": 7})
+    assert latest_step(tmp_path) == 7
+    restored, extra = load_checkpoint(tmp_path, jax.eval_shape(
+        lambda: tree))
+    assert extra["step"] == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"], np.float32),
+                                  np.asarray(tree["a"], np.float32))
+    assert restored["a"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_manager_async_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"x": jnp.zeros((8,))}
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, tree, extra={"step": s})
+    mgr.wait()
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+    assert latest_step(tmp_path) == 4
+
+
+def test_checkpoint_restore_resharded(tmp_path):
+    """Elastic restore: leaves saved under one topology restore under
+    another (here: explicit sharding on the current 1-device mesh)."""
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    save_checkpoint(tmp_path, 1, tree, extra={})
+    mesh = elastic_mesh()
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = {"w": NamedSharding(mesh, P(None, None))}
+    restored, _ = load_checkpoint(tmp_path, jax.eval_shape(lambda: tree),
+                                  shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+# ----------------------------------------------------------------------
+# fault tolerance
+# ----------------------------------------------------------------------
+def test_straggler_watchdog_flags_outliers():
+    flagged = []
+    wd = StragglerWatchdog(threshold=3.0, warmup=2,
+                           on_straggle=lambda s, dt, ema: flagged.append(s))
+    for i in range(8):
+        wd.start_step()
+        time.sleep(0.05 if i != 6 else 0.3)
+        wd.end_step()
+    assert flagged == [7]
+
+
+def test_heartbeat(tmp_path):
+    with Heartbeat(tmp_path / "hb", interval_s=0.05) as hb:
+        time.sleep(0.15)
+        assert hb.age() < 0.2
+
+
+# ----------------------------------------------------------------------
+# gradient compression
+# ----------------------------------------------------------------------
+def test_compressed_allreduce_small_error_and_unbiased():
+    mesh = elastic_mesh()
+    rng = np.random.default_rng(0)
+    grads = {"w": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+    out = compressed_grad_allreduce(grads, mesh,
+                                    key=jax.random.PRNGKey(1))
+    # single-device mesh: the all-reduce is an identity up to int8
+    # quantization error; stochastic rounding moves up to one full step
+    for k in grads:
+        scale = float(jnp.max(jnp.abs(grads[k]))) / 127.0
+        err = np.abs(np.asarray(out[k]) - np.asarray(grads[k]))
+        assert err.max() <= scale * 1.01
+    # unbiasedness: averaging over keys converges to the true gradient
+    acc = np.zeros((64, 64))
+    n = 30
+    for i in range(n):
+        o = compressed_grad_allreduce({"w": grads["w"]}, mesh,
+                                      key=jax.random.PRNGKey(i))
+        acc += np.asarray(o["w"]) / n
+    bias = np.abs(acc - np.asarray(grads["w"])).mean()
+    assert bias < float(jnp.max(jnp.abs(grads["w"]))) / 127.0 * 0.2

@@ -1,0 +1,96 @@
+"""End-to-end system tests: training converges on the synthetic corpus,
+resumes exactly after a simulated failure, and serving with continuous
+batching produces tokens; the dry-run path compiles on a small mesh."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_train_loss_decreases(tmp_path):
+    from repro.launch.train import main
+    out = main(["--arch", "qwen2-0.5b", "--reduced", "--steps", "25",
+                "--batch", "4", "--seq", "64",
+                "--ckpt-dir", str(tmp_path / "ck")])
+    losses = out["losses"]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+
+
+def test_train_restart_resumes(tmp_path):
+    """Simulated failure: run 10 steps, 'crash', restart to 16 — the
+    resumed run continues from the checkpoint, not from scratch."""
+    from repro.launch.train import main
+    ck = str(tmp_path / "ck")
+    first = main(["--arch", "qwen2-0.5b", "--reduced", "--steps", "10",
+                  "--batch", "4", "--seq", "64", "--ckpt-dir", ck,
+                  "--ckpt-every", "5"])
+    second = main(["--arch", "qwen2-0.5b", "--reduced", "--steps", "16",
+                   "--batch", "4", "--seq", "64", "--ckpt-dir", ck,
+                   "--ckpt-every", "5"])
+    # resumed run executed only steps 10..16
+    assert len(second["losses"]) == 6
+    # and continued improving from where the first left off
+    assert second["losses"][-1] < first["losses"][0]
+
+
+def test_serve_continuous_batching():
+    from repro.launch.serve import main
+    out = main(["--arch", "qwen2-0.5b", "--reduced", "--requests", "5",
+                "--batch", "2", "--prompt-len", "8", "--gen", "6"])
+    lens = [len(v) for v in out["outputs"].values()]
+    assert sorted(lens, reverse=True)[:4] == [6, 6, 6, 6]
+    assert sum(lens) >= 5 * 6 - 6  # last slot may hit the cache limit
+
+
+def test_dryrun_cell_compiles_small_mesh():
+    """Run the dry-run code path in a subprocess with 8 fake devices and a
+    reduced config: proves lower+compile+analysis works end-to-end without
+    the 512-device production mesh (which the full sweep covers)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs import get_config
+from repro.launch.steps import ShapeSpec, input_specs, make_train_step
+from repro.launch.hloanalysis import analyze
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+cfg = get_config("qwen3-4b", reduced=True)
+shape = ShapeSpec("tiny_train", "train", 64, 8)
+with mesh:
+    sp = input_specs(cfg, shape, mesh)
+    fn = make_train_step(cfg)
+    compiled = jax.jit(fn).lower(sp["params"], sp["opt_state"],
+                                 sp["batch"]).compile()
+costs = analyze(compiled.as_text())
+assert costs.dot_flops > 0
+assert compiled.memory_analysis() is not None
+print("OK", costs.dot_flops)
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=REPO, env=env, timeout=480)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+def test_dryrun_sweep_results_have_no_errors():
+    """If the full 80-cell sweep has been run, every cell must be ok or an
+    explicitly documented skip."""
+    res_dir = REPO / "results" / "dryrun"
+    if not res_dir.exists():
+        pytest.skip("full sweep not run in this environment")
+    recs = [json.loads(p.read_text()) for p in res_dir.glob("*.json")]
+    assert len(recs) >= 80
+    bad = [(r["arch"], r["shape"], r["mesh"]) for r in recs
+           if r["status"] not in ("ok", "skipped")]
+    assert not bad, f"dry-run failures: {bad}"
+    skips = [r for r in recs if r["status"] == "skipped"]
+    assert all("full-attention" in r["reason"] for r in skips)
