@@ -1,13 +1,19 @@
 """Benchmark aggregator: one module per paper table/figure (+ the
-beyond-paper benches).  Prints a final ``name,us_per_call,derived`` CSV.
+beyond-paper benches).  Prints a final ``name,us_per_call,derived`` CSV
+and writes the same rows to ``BENCH_results.json`` (uploaded as a CI
+artifact by the bench-smoke job so the perf trajectory is tracked
+per-PR).
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig1 stc   # substring filter
 """
 from __future__ import annotations
 
+import json
 import sys
 import traceback
+
+RESULTS_JSON = "BENCH_results.json"
 
 from . import (bench_fig1_formats, bench_fig11_scnn, bench_fig12_eyerissv2,
                bench_fig13_dstc, bench_fig15_16_stc_study,
@@ -46,6 +52,11 @@ def main() -> None:
             rows.append((name, -1.0, f"FAILED:{type(e).__name__}"))
     print(f"\n{'=' * 72}\n== CSV (name,us_per_call,derived)\n{'=' * 72}")
     emit(rows)
+    with open(RESULTS_JSON, "w") as f:
+        json.dump([{"name": name, "us_per_call": us, "derived": derived}
+                   for name, us, derived in rows], f, indent=2)
+        f.write("\n")
+    print(f"wrote {RESULTS_JSON} ({len(rows)} rows)")
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

@@ -23,8 +23,21 @@ from .taxonomy import (ActionSAF, RankFormat, SAFKind, SAFSpec,
                        TensorFormat)
 from .workload import TensorSpec, Workload, conv2d, dot, matmul, mv
 
+#: lazily exported (PEP 562): core.batched imports jax at module scope,
+#: and scalar-only users shouldn't pay that import cost up front
+_LAZY = {"BatchedModel", "BatchedUnsupported", "NestTemplate"}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        from . import batched
+        return getattr(batched, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "Architecture", "ComputeLevel", "StorageLevel",
+    "BatchedModel", "BatchedUnsupported", "NestTemplate",
     "ActualDataModel", "BandedModel", "DenseModel", "DensityModel",
     "StructuredModel", "UniformModel", "make_density_model",
     "Design", "Evaluation", "Sparseloop",

@@ -1,0 +1,672 @@
+"""Batched mapspace evaluation: the three-step Sparseloop model (dataflow
+-> sparse -> micro-architecture) vectorized over a *population* of loop
+nests with JAX ``vmap`` + ``jit``.
+
+Why this exists (ROADMAP north-star / paper Sec. 6.2): the paper's speed
+metric (CPHC) measures one-mapping-at-a-time evaluation.  Because all
+three analysis steps are closed-form given the loop *structure*, every
+mapping that shares a structure — same (rank, level, spatial) slot
+sequence, arbitrary bounds — can be evaluated as one jitted computation:
+thousands of mappings per millisecond on CPU, more on accelerators.  This
+module generalizes the equations that used to be frozen into
+``vmapper.py`` (a single hard-coded two-level spMspM template) to
+
+  * arbitrary storage-level counts,
+  * arbitrary rank sets / extended-Einsum projections,
+  * arbitrary ``SAFSpec``s: per-(level, tensor) hierarchical formats,
+    gating/skipping with leader-follower intersection windows, compression
+    metadata — the same math as ``sparse.py``/``formats.py``, traced.
+
+The lowering contract
+---------------------
+A :class:`NestTemplate` is the loop structure with the bounds stripped.
+Bound-1 slots are *allowed* and treated exactly as if the loop were absent
+(the scalar mapper never emits unit loops; reuse-prefix and leader-window
+boundaries are therefore recomputed per candidate from ``bound > 1``
+masks, keeping batched results bit-comparable with the scalar engine's
+dropped-unit-loop semantics).
+
+``BatchedModel.evaluate`` matches scalar ``Sparseloop.evaluate`` to
+float64 round-off (tests/test_batched.py pins <=1e-6 relative); the
+scalar engine remains the per-candidate reference oracle.
+
+Density models must provide traceable statistics (``DensityModel.batched``
+— dense / uniform / structured).  Coordinate-dependent models (banded,
+actual data) raise :class:`BatchedUnsupported`; callers fall back to the
+scalar path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from .arch import Architecture
+from .density import (BatchedDensityUnsupported, DensityModel,
+                      make_density_model)
+from .mapping import Loop, LoopNest
+from .taxonomy import RankFormat, SAFSpec, SAFKind
+from .workload import TensorSpec, Workload
+
+WORD_BITS = 16.0  # metadata accounting word width (matches sparse.py)
+
+
+class BatchedUnsupported(NotImplementedError):
+    """The (design, workload) pair has no batched path; use the scalar
+    engine instead."""
+
+
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class NestTemplate:
+    """Loop structure shared by a mapspace slice.
+
+    ``slots`` are (rank, level, spatial) triples, outermost-first — a
+    :class:`LoopNest` with the bounds stripped.  All candidates evaluated
+    together instantiate this structure with per-slot bounds >= 1.
+    """
+
+    slots: tuple[tuple[str, int, bool], ...]
+    num_levels: int
+
+    @staticmethod
+    def of_nest(nest: LoopNest) -> "NestTemplate":
+        return NestTemplate(slots=nest.structure(),
+                            num_levels=nest.num_levels)
+
+    @property
+    def num_slots(self) -> int:
+        return len(self.slots)
+
+    def bounds_of(self, nest: LoopNest) -> np.ndarray:
+        """Per-slot bounds of a nest with this structure."""
+        if NestTemplate.of_nest(nest) != self:
+            raise ValueError("nest structure does not match template")
+        return np.asarray(nest.bounds(), np.int64)
+
+    def nest_with(self, bounds) -> LoopNest:
+        """Instantiate a concrete LoopNest (unit loops dropped, matching
+        what the scalar mapper would have generated)."""
+        loops = [Loop(rank=r, bound=int(b), level=lvl, spatial=sp)
+                 for (r, lvl, sp), b in zip(self.slots, bounds)
+                 if int(b) > 1]
+        return LoopNest(loops=tuple(loops), num_levels=self.num_levels)
+
+
+def template_of(nest: LoopNest) -> NestTemplate:
+    return NestTemplate.of_nest(nest)
+
+
+# ----------------------------------------------------------------------
+def _prod(xs):
+    out = 1.0
+    for x in xs:
+        out = out * x
+    return out
+
+
+def _suffix_any(mask):
+    """suffix_any[j] = any(mask[j:]) — the reuse-boundary scan."""
+    return jnp.flip(jnp.cumsum(jnp.flip(mask)) > 0)
+
+
+def _union_b(probs_by_leader: dict):
+    keep = 1.0
+    for p in probs_by_leader.values():
+        keep = keep * (1.0 - p)
+    return 1.0 - keep
+
+
+def _merge_b(dst: dict, leader: str, p) -> None:
+    dst[leader] = jnp.maximum(dst.get(leader, 0.0), p)
+
+
+@dataclasses.dataclass
+class _Breakdown:
+    actual: object = 0.0
+    gated: object = 0.0
+    skipped: object = 0.0
+
+
+class BatchedModel:
+    """Compiled batched evaluator for one (design, workload, template).
+
+    ``evaluate(bounds)`` takes an (C, num_slots) integer array of per-slot
+    loop bounds and returns per-candidate metric arrays.  The jitted
+    program is cached on the instance; reuse the instance across calls
+    (``Sparseloop.evaluate_batch`` and ``mapper.search`` do).
+    """
+
+    def __init__(self, design, workload: Workload, template: NestTemplate,
+                 check_capacity: bool = True):
+        arch: Architecture = design.arch
+        if template.num_levels != arch.num_levels:
+            raise ValueError(
+                f"template has {template.num_levels} levels, architecture "
+                f"{arch.name} has {arch.num_levels}")
+        self.design = design
+        self.arch = arch
+        self.safs: SAFSpec = design.safs
+        self.workload = workload
+        self.template = template
+        self.check_capacity = check_capacity
+        self.level_names = [arch.level(s).name
+                            for s in range(arch.num_levels)]
+        self.models: dict[str, DensityModel] = {
+            t.name: make_density_model(workload.density_spec(t.name),
+                                       t.size(workload.rank_bounds))
+            for t in workload.tensors
+        }
+        for name, m in self.models.items():
+            if not m.batched:
+                raise BatchedUnsupported(
+                    f"density model for tensor {name!r} "
+                    f"({type(m).__name__}) has no traceable closed form")
+        self._fn = jax.jit(jax.vmap(self._single))
+
+    # ------------------------------------------------------------------
+    def evaluate(self, bounds) -> dict[str, np.ndarray]:
+        """bounds: (C, num_slots) -> dict of (C,) arrays."""
+        bounds = np.asarray(bounds)
+        if bounds.ndim != 2 or bounds.shape[1] != self.template.num_slots:
+            raise ValueError(
+                f"bounds must be (C, {self.template.num_slots}), "
+                f"got {bounds.shape}")
+        with enable_x64():
+            out = self._fn(jnp.asarray(bounds, jnp.float64))
+            return {k: np.asarray(v) for k, v in out.items()}
+
+    # ------------------------------------------------------------------
+    # The traced per-candidate program.  Mirrors analyze_dataflow /
+    # analyze_sparse / evaluate_microarch line by line; any change to the
+    # scalar model must be reflected here (the parity suite pins it).
+    # ------------------------------------------------------------------
+    def _single(self, b):
+        wl = self.workload
+        slots = self.template.slots
+        S = self.template.num_levels
+        arch = self.arch
+        models = self.models
+        expanded = self.safs.expand_double_sided()
+        zname = wl.output
+        zspec = wl.output_tensor
+
+        temporal = [j for j, (_, _, sp) in enumerate(slots) if not sp]
+        spatial = [j for j, (_, _, sp) in enumerate(slots) if sp]
+
+        def spatial_at(level):
+            return [j for j in spatial if slots[j][1] == level]
+
+        def instances_of(level):
+            return _prod(b[j] for j in spatial if slots[j][1] > level)
+
+        # ---------------- step 1: dataflow (dense traffic) ----------------
+        def fetch_counts(child_level, rel):
+            """(rounds, distinct) tile-fetch counts into child_level; the
+            reuse prefix ends at the innermost relevant *non-unit* loop."""
+            js = [j for j in temporal if slots[j][1] > child_level]
+            rels = [slots[j][0] in rel for j in js]
+            if not js or not any(rels):
+                return 1.0, 1.0
+            bs = jnp.stack([b[j] for j in js])
+            rel_arr = jnp.asarray(rels)
+            in_prefix = _suffix_any(rel_arr & (bs > 1))
+            rounds = jnp.prod(jnp.where(in_prefix, bs, 1.0))
+            distinct = jnp.prod(jnp.where(in_prefix & rel_arr, bs, 1.0))
+            return rounds, distinct
+
+        def tile_bounds(level):
+            tb: dict[str, object] = {}
+            for j, (r, lvl, _) in enumerate(slots):
+                if lvl <= level:
+                    tb[r] = tb.get(r, 1.0) * b[j]
+            return tb
+
+        def tile_dims(t: TensorSpec, tb):
+            return tuple(
+                sum(tb.get(r, 1.0) for r in dim) - (len(dim) - 1)
+                for dim in t.projection)
+
+        def tile_size(t: TensorSpec, tb):
+            return _prod(tile_dims(t, tb))
+
+        total_temporal = _prod(b[j] for j in temporal)
+        total_spatial = _prod(b[j] for j in spatial)
+        dense_computes = total_temporal * total_spatial
+
+        dense: dict[tuple[str, int], dict] = {}
+        for t in wl.tensors:
+            rel = t.ranks
+            is_out = t.name == zname
+            for s in range(S):
+                tb = tile_bounds(s)
+                tdims = tile_dims(t, tb)
+                tsize = _prod(tdims)
+                tl = dict(tile_dims=tdims, tile_size=tsize,
+                          fill_words=0.0, partial_fill_words=0.0,
+                          read_words=0.0, read_rounds=1.0,
+                          update_words=0.0, rmw_read_words=0.0,
+                          writeback_words=0.0,
+                          instances=instances_of(s))
+
+                rounds, distinct = fetch_counts(s, rel)
+                if s < S - 1:
+                    if not is_out:
+                        tl["fill_words"] = rounds * tsize
+                    else:
+                        tl["partial_fill_words"] = (rounds - distinct) * tsize
+
+                child = s - 1
+                child_tb = tile_bounds(child) if child >= 0 else {}
+                c_rounds, c_distinct = fetch_counts(child, rel)
+                served_tb = dict(child_tb)
+                for j in spatial_at(s):
+                    r = slots[j][0]
+                    if r in rel:
+                        served_tb[r] = served_tb.get(r, 1.0) * b[j]
+                served_words = tile_size(t, served_tb)
+                tl["read_rounds"] = c_rounds
+                if not is_out:
+                    tl["read_words"] = c_rounds * served_words
+                else:
+                    child_tile = tile_size(t, child_tb)
+                    spatial_rel = _prod(b[j] for j in spatial_at(s)
+                                        if slots[j][0] in rel)
+                    tl["read_words"] = ((c_rounds - c_distinct) * child_tile
+                                        * spatial_rel if s > 0 else 0.0)
+
+                if is_out:
+                    fanout = _prod(b[j] for j in spatial_at(s))
+                    if s == 0:
+                        tl["update_words"] = (total_temporal
+                                              * jnp.maximum(1.0, fanout))
+                    else:
+                        ce, _cd = fetch_counts(s - 1, rel)
+                        child_tile = tile_size(t, tile_bounds(s - 1))
+                        tl["update_words"] = fanout * ce * child_tile
+                    if s < S - 1:
+                        tl["rmw_read_words"] = jnp.maximum(
+                            0.0, tl["update_words"] - distinct * tsize)
+                        tl["writeback_words"] = rounds * tsize
+                    else:
+                        tl["rmw_read_words"] = jnp.maximum(
+                            0.0, tl["update_words"]
+                            - t.size(wl.rank_bounds)
+                            / jnp.maximum(1.0, tl["instances"]))
+
+                dense[(t.name, s)] = tl
+
+        # ---------------- step 2: sparse filtering ----------------
+        def leader_window_bounds(level, follower_ranks):
+            """Per-rank leader-intersection window (dataflow.
+            leader_tile_bounds), with unit loops treated as absent."""
+            bounds: dict[str, object] = {}
+            for j, (r, lvl, _) in enumerate(slots):
+                if lvl < level:
+                    bounds[r] = bounds.get(r, 1.0) * b[j]
+            outer = [j for j in temporal if slots[j][1] >= level]
+            if outer:
+                rels = jnp.asarray(
+                    [slots[j][0] in follower_ranks for j in outer])
+                bs = jnp.stack([b[j] for j in outer])
+                include = ~_suffix_any(rels & (bs > 1))
+                for i, j in enumerate(outer):
+                    r = slots[j][0]
+                    bounds[r] = bounds.get(r, 1.0) * jnp.where(
+                        include[i], b[j], 1.0)
+            return bounds
+
+        def leader_prob(follower: TensorSpec, level_idx, lname: str):
+            leader = wl.tensor(lname)
+            bounds = leader_window_bounds(level_idx, follower.ranks)
+            tile = jnp.maximum(1.0, tile_size(leader, bounds))
+            return models[lname].prob_empty_b(tile)
+
+        skip_ev: dict[tuple[str, int], dict] = {}
+        gate_ev: dict[tuple[str, int], dict] = {}
+        comp_skip_ev: dict[str, float] = {}
+        comp_gate_ev: dict[str, float] = {}
+
+        for saf in expanded:
+            if saf.level == "compute":
+                for lname in saf.leaders:
+                    p = 1.0 - models[lname].expected_density(1)
+                    dst = (comp_skip_ev if saf.kind == SAFKind.SKIP
+                           else comp_gate_ev)
+                    dst[lname] = max(dst.get(lname, 0.0), p)
+                continue
+            lvl = self.level_names.index(saf.level)
+            key = (saf.follower, lvl)
+            follower = wl.tensor(saf.follower)
+            for lname in saf.leaders:
+                p = leader_prob(follower, lvl, lname)
+                dst = skip_ev if saf.kind == SAFKind.SKIP else gate_ev
+                dst.setdefault(key, {})
+                _merge_b(dst[key], lname, p)
+
+        local: dict[tuple[str, int], tuple] = {}
+        for t in wl.tensors:
+            for s in range(S):
+                sk = _union_b(skip_ev.get((t.name, s), {}))
+                gt = jnp.maximum(
+                    0.0, _union_b({**gate_ev.get((t.name, s), {}),
+                                   **skip_ev.get((t.name, s), {})}) - sk)
+                local[(t.name, s)] = (sk, gt)
+
+        z_round: dict[int, tuple] = {}
+        for s in range(S):
+            r_skip: dict[str, object] = {}
+            r_gate: dict[str, object] = {}
+            for saf in expanded:
+                if saf.follower != zname or saf.level == "compute":
+                    continue
+                for lname in saf.leaders:
+                    leader = wl.tensor(lname)
+                    bounds = leader_window_bounds(s + 1, zspec.ranks)
+                    tile = jnp.maximum(1.0, tile_size(leader, bounds))
+                    p = models[lname].prob_empty_b(tile)
+                    dst = r_skip if saf.kind == SAFKind.SKIP else r_gate
+                    _merge_b(dst, lname, p)
+            sk = _union_b(r_skip)
+            gt = jnp.maximum(0.0, _union_b({**r_gate, **r_skip}) - sk)
+            z_round[s] = (sk, gt)
+
+        live_frac: dict[tuple[str, int], object] = {}
+        gated_from_above: dict[tuple[str, int], object] = {}
+        for t in wl.tensors:
+            not_skipped, live = 1.0, 1.0
+            for s in range(S - 1, -1, -1):
+                live_frac[(t.name, s)] = live
+                gated_from_above[(t.name, s)] = not_skipped - live
+                sk, gt = local[(t.name, s)]
+                not_skipped = not_skipped * (1.0 - sk)
+                live = live * jnp.maximum(0.0, 1.0 - sk - gt)
+            live_frac[(t.name, -1)] = live
+            gated_from_above[(t.name, -1)] = not_skipped - live
+
+        impl_skip0: dict[str, object] = {}
+        impl_gate0: dict[str, object] = {}
+        for t in wl.tensors:
+            for s in range(S):
+                for lname, p in skip_ev.get((t.name, s), {}).items():
+                    _merge_b(impl_skip0, lname, p)
+                for lname, p in gate_ev.get((t.name, s), {}).items():
+                    _merge_b(impl_gate0, lname, p)
+        for lname, p in comp_skip_ev.items():
+            _merge_b(impl_skip0, lname, p)
+        for lname, p in comp_gate_ev.items():
+            _merge_b(impl_gate0, lname, p)
+        c_skip = _union_b(impl_skip0)
+        c_gate = jnp.maximum(
+            0.0, _union_b({**impl_gate0, **impl_skip0}) - c_skip)
+        c_act = jnp.maximum(0.0, 1.0 - c_skip - c_gate)
+
+        # ---- format analyzer (formats.analyze_tile_format, traced) ----
+        def fmt_stats(fmt, dims, model: DensityModel):
+            dims = list(dims) or [1.0]
+            nfr = len(fmt.rank_formats)
+            if len(dims) < nfr:
+                dims = [1.0] * (nfr - len(dims)) + dims
+            elif len(dims) > nfr:
+                head = _prod(dims[: len(dims) - nfr + 1])
+                dims = [head] + dims[len(dims) - nfr + 1:]
+            tsize = _prod(dims)
+            payload = [_prod(dims[i + 1:]) for i in range(len(dims))]
+
+            meta_avg = meta_max = 0.0
+            fibers_avg, fibers_max = 1.0, 1.0
+            for i, (rf, d, sz) in enumerate(
+                    zip(fmt.rank_formats, dims, payload)):
+                coords_avg = fibers_avg * d
+                coords_max = fibers_max * d
+                p_ne = 1.0 - model.prob_empty_b(jnp.maximum(1.0, sz))
+                n_blocks = _prod(dims[: i + 1])
+                occ_avg = jnp.minimum(coords_avg, n_blocks * p_ne)
+                occ_max = jnp.maximum(0.0, jnp.minimum(
+                    coords_max,
+                    jnp.ceil(model.max_nnz_b(tsize)
+                             / jnp.maximum(1.0, sz))))
+
+                cb = float(fmt.coord_bits)
+                if rf == RankFormat.U:
+                    bits_avg = bits_max = 0.0
+                    occ_avg, occ_max = coords_avg, coords_max
+                elif rf in (RankFormat.B, RankFormat.UB):
+                    bits_avg = fibers_avg * d
+                    bits_max = fibers_max * d
+                    if rf == RankFormat.UB:
+                        occ_avg, occ_max = coords_avg, coords_max
+                elif rf in (RankFormat.CP, RankFormat.RLE):
+                    bits_avg = occ_avg * cb
+                    bits_max = occ_max * cb
+                elif rf == RankFormat.UOP:
+                    bits_avg = fibers_avg * 2.0 * cb
+                    bits_max = fibers_max * 2.0 * cb
+                else:  # pragma: no cover
+                    raise BatchedUnsupported(f"rank format {rf}")
+                meta_avg = meta_avg + bits_avg
+                meta_max = meta_max + bits_max
+                fibers_avg, fibers_max = occ_avg, occ_max
+
+            if fmt.is_uncompressed:
+                data_avg = data_max = tsize * 1.0
+            else:
+                data_avg = jnp.minimum(
+                    tsize * 1.0, model.expected_density_b(tsize) * tsize)
+                data_max = jnp.minimum(tsize * 1.0, model.max_nnz_b(tsize))
+            return dict(meta_avg=meta_avg, meta_max=meta_max,
+                        data_avg=data_avg, data_max=data_max,
+                        tile_size=tsize)
+
+        # ---- per-(tensor, level) sparse assembly ----
+        sparse: dict[tuple[str, int], dict] = {}
+        for t in wl.tensors:
+            model = models[t.name]
+            is_out = t.name == zname
+            for s in range(S):
+                tl = dense[(t.name, s)]
+                fmt = self.safs.format_for(self.level_names[s], t.name)
+                fs = fmt_stats(fmt, tl["tile_dims"], model)
+
+                live = live_frac[(t.name, s)]
+                g_above = gated_from_above[(t.name, s)]
+                sk, gt = local[(t.name, s)]
+                act_f = live * jnp.maximum(0.0, 1.0 - sk - gt)
+                gate_f = live * gt + g_above
+                skip_f = jnp.maximum(0.0, 1.0 - act_f - gate_f)
+                a_act = live
+                a_gate = g_above
+                a_skip = jnp.maximum(0.0, 1.0 - a_act - a_gate)
+
+                density_scale = (fs["data_avg"]
+                                 / jnp.maximum(1.0, fs["tile_size"])
+                                 if fmt.compressed else 1.0)
+
+                def bd(dense_words, fr=None,
+                       _fr0=(act_f, gate_f, skip_f), _ds=density_scale):
+                    fa, fg, fsk = fr if fr else _fr0
+                    moved = dense_words * _ds
+                    return _Breakdown(actual=moved * fa, gated=moved * fg,
+                                      skipped=moved * fsk)
+
+                if is_out:
+                    if s == 0:
+                        upd_fr = (c_act, c_gate, c_skip)
+                    else:
+                        live_c = live_frac[(t.name, s - 1)]
+                        g_c = gated_from_above[(t.name, s - 1)]
+                        sk_c, gt_c = z_round[s - 1]
+                        ac = live_c * jnp.maximum(0.0, 1.0 - sk_c - gt_c)
+                        gc = live_c * gt_c + g_c
+                        upd_fr = (ac, gc, jnp.maximum(0.0, 1.0 - ac - gc))
+                    updates = bd(tl["update_words"], upd_fr)
+                    distinct_words = (tl["update_words"]
+                                      - tl["rmw_read_words"])
+                    rmw = jnp.maximum(0.0, updates.actual - distinct_words)
+                    sk_r, gt_r = z_round[s]
+                    wa = live * jnp.maximum(0.0, 1.0 - sk_r - gt_r)
+                    wg = live * gt_r + g_above
+                    wb_fr = (wa, wg, jnp.maximum(0.0, 1.0 - wa - wg))
+                    wb = bd(tl["writeback_words"], wb_fr)
+                    pf = bd(tl["partial_fill_words"], wb_fr)
+                    reads = _Breakdown(actual=wb.actual + rmw,
+                                       gated=wb.gated, skipped=wb.skipped)
+                    fills = pf
+                else:
+                    reads = bd(tl["read_words"])
+                    fills = bd(tl["fill_words"], (a_act, a_gate, a_skip))
+                    updates = _Breakdown()
+
+                meta_per_word = (fs["meta_avg"]
+                                 / jnp.maximum(1e-9, fs["data_avg"])
+                                 / WORD_BITS)
+                has_meta = fs["meta_avg"] > 0
+                meta_reads = jnp.where(
+                    has_meta, (reads.actual + reads.gated) * meta_per_word,
+                    0.0)
+                meta_fills = jnp.where(
+                    has_meta,
+                    (fills.actual + fills.gated
+                     + updates.actual + updates.gated) * meta_per_word,
+                    0.0)
+
+                sparse[(t.name, s)] = dict(
+                    reads=reads, fills=fills, updates=updates,
+                    meta_reads=meta_reads, meta_fills=meta_fills,
+                    occ_max=fs["data_max"] + fs["meta_max"] / WORD_BITS,
+                    instances=tl["instances"])
+
+        # ---- intersection-check overhead (leader metadata scans) ----
+        for saf in expanded:
+            if saf.level == "compute":
+                continue
+            lvl = self.level_names.index(saf.level)
+            follower = wl.tensor(saf.follower)
+            rounds = dense[(saf.follower, lvl)]["read_rounds"]
+            for lname in saf.leaders:
+                leader = wl.tensor(lname)
+                bounds = leader_window_bounds(lvl, follower.ranks)
+                ldims = tile_dims(leader, bounds)
+                lfmt = self.safs.format_for(self.level_names[lvl], lname)
+                ls = fmt_stats(lfmt, ldims, models[lname])
+                bits = jnp.where(ls["meta_avg"] > 0, ls["meta_avg"],
+                                 ls["tile_size"] * 1.0)
+                sparse[(saf.follower, lvl)]["meta_reads"] = (
+                    sparse[(saf.follower, lvl)]["meta_reads"]
+                    + rounds * bits / WORD_BITS)
+
+        compute_actual = dense_computes * c_act
+        compute_gated = dense_computes * c_gate
+        compute_skipped = dense_computes * c_skip
+
+        # ---------------- step 3: micro-architecture ----------------
+        valid = jnp.asarray(True)
+        energy = 0.0
+        worst_cycles = 0.0
+        for s in range(S):
+            lvl = arch.level(s)
+            ra = rg = wa = wg = meta = occ = 0.0
+            inst = 1.0
+            for t in wl.tensors:
+                st = sparse[(t.name, s)]
+                inst = jnp.maximum(inst, st["instances"])
+                ra = ra + st["reads"].actual
+                rg = rg + st["reads"].gated
+                wa = wa + st["fills"].actual + st["updates"].actual
+                wg = wg + st["fills"].gated + st["updates"].gated
+                meta = meta + st["meta_reads"] + st["meta_fills"]
+                occ = occ + st["occ_max"]
+            if self.check_capacity and not math.isinf(lvl.capacity_words):
+                valid = valid & (occ <= lvl.capacity_words)
+            energy = energy + inst * (
+                ra * lvl.read_energy_pj + wa * lvl.write_energy_pj
+                + (rg + wg) * lvl.gated_energy_pj
+                + meta * lvl.metadata_read_energy_pj)
+            cyc = (ra + rg + wa + wg + meta) / lvl.bandwidth_words_per_cycle
+            worst_cycles = jnp.maximum(worst_cycles, cyc)
+
+        pe = arch.compute
+        n_inst = jnp.clip(total_spatial * 1.0, 1.0, float(pe.instances))
+        compute_cycles = ((compute_actual + compute_gated)
+                          / (n_inst * pe.throughput))
+        energy = energy + (compute_actual * pe.mac_energy_pj
+                           + compute_gated * pe.gated_energy_pj)
+        cycles = jnp.maximum(worst_cycles, compute_cycles)
+
+        return {
+            "cycles": cycles,
+            "energy_pj": energy,
+            "edp": cycles * energy,
+            "valid": valid,
+            "compute_actual": compute_actual,
+            "compute_gated": compute_gated,
+            "compute_skipped": compute_skipped,
+            "dense_computes": dense_computes * jnp.ones(()),
+        }
+
+
+# ----------------------------------------------------------------------
+# Content-keyed model cache: jit compiles are expensive (seconds); callers
+# across Sparseloop instances / benchmark reps must hit the same compiled
+# program for the same (design, workload, template).
+# ----------------------------------------------------------------------
+_MODEL_CACHE: dict = {}
+_MODEL_CACHE_CAP = 128
+
+
+def _freeze(x):
+    if isinstance(x, dict):
+        return tuple(sorted((k, _freeze(v)) for k, v in x.items()))
+    if isinstance(x, (list, tuple)):
+        return tuple(_freeze(v) for v in x)
+    if isinstance(x, np.ndarray):
+        return ("ndarray", id(x))
+    return x
+
+
+def _cache_key(design, workload: Workload, template: NestTemplate,
+               check_capacity: bool):
+    return (design.arch, _freeze(design.safs.formats), design.safs.actions,
+            workload.name, tuple(workload.rank_bounds.items()),
+            workload.tensors, workload.output, _freeze(workload.densities),
+            template, check_capacity)
+
+
+def get_batched_model(design, workload: Workload, template: NestTemplate,
+                      check_capacity: bool = True) -> BatchedModel:
+    """Memoized :class:`BatchedModel` constructor."""
+    key = _cache_key(design, workload, template, check_capacity)
+    model = _MODEL_CACHE.get(key)
+    if model is None:
+        model = BatchedModel(design, workload, template,
+                             check_capacity=check_capacity)
+        if len(_MODEL_CACHE) >= _MODEL_CACHE_CAP:
+            _MODEL_CACHE.pop(next(iter(_MODEL_CACHE)))
+        _MODEL_CACHE[key] = model
+    return model
+
+
+def group_by_template(nests) -> dict[NestTemplate, list[int]]:
+    """Stable grouping of candidate nests by loop structure."""
+    groups: dict[NestTemplate, list[int]] = {}
+    for i, nest in enumerate(nests):
+        groups.setdefault(template_of(nest), []).append(i)
+    return groups
+
+
+def batched_supported(design, workload: Workload) -> bool:
+    """True when every tensor's density model has a traceable closed form
+    (the batched path refuses coordinate-dependent models)."""
+    try:
+        for t in workload.tensors:
+            m = make_density_model(workload.density_spec(t.name),
+                                   t.size(workload.rank_bounds))
+            if not m.batched:
+                return False
+    except (BatchedDensityUnsupported, ValueError):
+        return False
+    return True

@@ -30,13 +30,17 @@ from .workload import TensorSpec, Workload
 
 
 # ----------------------------------------------------------------------
-def _fetch_counts(nest: LoopNest, child_level: int,
-                  relevant_ranks: frozenset[str]) -> tuple[float, float]:
+def fetch_counts(nest: LoopNest, child_level: int,
+                 relevant_ranks: frozenset[str]) -> tuple[float, float]:
     """(rounds, distinct) tile-fetch counts into `child_level`.
 
     rounds   = product of temporal-loop bounds at levels > child_level,
                outermost down to the innermost relevant loop (inclusive).
     distinct = product of only the relevant bounds within that prefix.
+
+    This is the scalar reuse-prefix rule the batched engine
+    (core.batched) re-derives per candidate from ``bound > 1`` masks;
+    keep the two in sync (the parity suite pins them against each other).
     """
     loops = [lp for lp in nest.loops
              if not lp.spatial and lp.level > child_level]
@@ -128,7 +132,7 @@ def analyze_dataflow(workload: Workload, nest: LoopNest) -> DenseTraffic:
                 instances=nest.instances_of(s))
 
             # ---- fills into this level from the parent ----
-            rounds, distinct = _fetch_counts(nest, s, rel)
+            rounds, distinct = fetch_counts(nest, s, rel)
             if s < S - 1:  # outermost level holds the source data
                 if not is_out:
                     tlt.fill_rounds = rounds
@@ -141,7 +145,7 @@ def analyze_dataflow(workload: Workload, nest: LoopNest) -> DenseTraffic:
             # ---- reads from this level serving the child below ----
             child = s - 1
             child_tb = nest.tile_bounds(child) if child >= 0 else {}
-            c_rounds, c_distinct = _fetch_counts(nest, child, rel)
+            c_rounds, c_distinct = fetch_counts(nest, child, rel)
             spatial_here = nest.spatial_loops_at(s)
             served_tb = _merge_bounds(child_tb, spatial_here, rel)
             served_dims = t.tile_dims(served_tb)
@@ -174,7 +178,7 @@ def analyze_dataflow(workload: Workload, nest: LoopNest) -> DenseTraffic:
                         lp.bound for lp in nest.loops if not lp.spatial)
                     tlt.update_words = temporal_here * max(1, fanout)
                 else:
-                    ce, cd = _fetch_counts(nest, s - 1, rel)
+                    ce, cd = fetch_counts(nest, s - 1, rel)
                     child_tile = t.tile_size(nest.tile_bounds(s - 1))
                     tlt.update_words = fanout * ce * child_tile
                 tlt.rmw_read_words = max(
@@ -189,7 +193,7 @@ def analyze_dataflow(workload: Workload, nest: LoopNest) -> DenseTraffic:
 
     compute_reads = {}
     for t in workload.input_tensors:
-        rounds, _ = _fetch_counts(nest, -1, t.ranks)
+        rounds, _ = fetch_counts(nest, -1, t.ranks)
         compute_reads[t.name] = rounds
 
     return DenseTraffic(

@@ -40,8 +40,43 @@ def _log_comb(n: float, k: float) -> float:
     return (math.lgamma(n + 1) - math.lgamma(k + 1) - math.lgamma(n - k + 1))
 
 
+def _log_comb_b(n, k):
+    """Traceable log C(n, k) for jnp array inputs; -inf when invalid."""
+    import jax.numpy as jnp
+    from jax.scipy.special import gammaln
+    valid = (k >= 0) & (k <= n) & (n >= 0)
+    out = gammaln(n + 1.0) - gammaln(k + 1.0) - gammaln(n - k + 1.0)
+    return jnp.where(valid, out, -jnp.inf)
+
+
+class BatchedDensityUnsupported(NotImplementedError):
+    """Raised when a density model has no closed-form batched (JAX) path.
+
+    Coordinate-dependent models (banded, actual-data) iterate concrete
+    tile grids and cannot be traced; callers (core.batched) catch this and
+    fall back to the scalar engine.
+    """
+
+
 class DensityModel:
     """Base interface; tile_size is the flattened number of elements."""
+
+    #: True when the *_b methods below are traceable closed forms usable
+    #: from vmapped/jitted code (core.batched).
+    batched: bool = False
+
+    def prob_empty_b(self, tile_size):
+        """Traceable ``prob_empty``: tile_size is a jnp scalar/array."""
+        raise BatchedDensityUnsupported(type(self).__name__)
+
+    def prob_nonempty_b(self, tile_size):
+        return 1.0 - self.prob_empty_b(tile_size)
+
+    def expected_density_b(self, tile_size):
+        raise BatchedDensityUnsupported(type(self).__name__)
+
+    def max_nnz_b(self, tile_size):
+        raise BatchedDensityUnsupported(type(self).__name__)
 
     #: fraction of nonzeros in the whole tensor
     density: float
@@ -76,12 +111,24 @@ class DensityModel:
 class DenseModel(DensityModel):
     tensor_size: int = 1
     density: float = 1.0
+    batched = True
 
     def prob_empty(self, tile_size: int) -> float:
         return 0.0
 
     def max_nnz(self, tile_size: int) -> int:
         return tile_size
+
+    def prob_empty_b(self, tile_size):
+        import jax.numpy as jnp
+        return jnp.zeros_like(tile_size * 1.0)
+
+    def expected_density_b(self, tile_size):
+        import jax.numpy as jnp
+        return jnp.ones_like(tile_size * 1.0)
+
+    def max_nnz_b(self, tile_size):
+        return tile_size * 1.0
 
 
 @dataclasses.dataclass
@@ -90,6 +137,7 @@ class UniformModel(DensityModel):
 
     tensor_size: int
     density: float
+    batched = True
 
     @property
     def nnz(self) -> int:
@@ -108,6 +156,21 @@ class UniformModel(DensityModel):
 
     def max_nnz(self, tile_size: int) -> int:
         return min(tile_size, self.nnz)
+
+    def prob_empty_b(self, tile_size):
+        import jax.numpy as jnp
+        S, N = float(self.tensor_size), float(self.nnz)
+        T = jnp.minimum(tile_size * 1.0, S)
+        lp = _log_comb_b(S - N, T) - _log_comb_b(S, T)
+        return jnp.exp(lp)
+
+    def expected_density_b(self, tile_size):
+        import jax.numpy as jnp
+        return jnp.full_like(tile_size * 1.0, self.density)
+
+    def max_nnz_b(self, tile_size):
+        import jax.numpy as jnp
+        return jnp.minimum(tile_size * 1.0, float(self.nnz))
 
 
 @dataclasses.dataclass
@@ -144,6 +207,26 @@ class StructuredModel(DensityModel):
     def max_nnz(self, tile_size: int) -> int:
         full, rem = divmod(tile_size, self.m)
         return min(tile_size, full * self.n + min(rem, self.n))
+
+    batched = True
+
+    def prob_empty_b(self, tile_size):
+        import jax.numpy as jnp
+        t = tile_size * 1.0
+        lp = _log_comb_b(float(self.m - self.n), t) \
+            - _log_comb_b(float(self.m), t)
+        return jnp.where(t >= self.m - self.n + 1, 0.0, jnp.exp(lp))
+
+    def expected_density_b(self, tile_size):
+        import jax.numpy as jnp
+        return jnp.full_like(tile_size * 1.0, self.n / self.m)
+
+    def max_nnz_b(self, tile_size):
+        import jax.numpy as jnp
+        t = tile_size * 1.0
+        full = jnp.floor(t / self.m)
+        rem = t - full * self.m
+        return jnp.minimum(t, full * self.n + jnp.minimum(rem, self.n))
 
 
 @dataclasses.dataclass

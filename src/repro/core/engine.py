@@ -11,6 +11,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Iterable, Sequence
+
+import numpy as np
 
 from .arch import Architecture
 from .dataflow import DenseTraffic, analyze_dataflow
@@ -61,7 +64,13 @@ class Evaluation:
 
 class Sparseloop:
     """The analytical model.  Fast because it is statistical: it never
-    iterates the computation space (Sec. 6.2)."""
+    iterates the computation space (Sec. 6.2).
+
+    ``evaluate`` is the scalar reference oracle (one mapping at a time);
+    ``evaluate_batch`` lowers a whole candidate population onto the
+    vectorized JAX engine (core.batched) — same math, one jitted
+    computation per loop-structure template.
+    """
 
     def __init__(self, design: Design):
         self.design = design
@@ -88,6 +97,44 @@ class Sparseloop:
                                     check_capacity=check_capacity)
         return Evaluation(result=result, dense=dense, sparse=sparse,
                           wall_seconds=time.perf_counter() - t0)
+
+    # ------------------------------------------------------------------
+    def batched_model(self, workload: Workload, template,
+                      check_capacity: bool = True):
+        """Compiled batched evaluator for one loop-structure template
+        (content-cached — repeated calls reuse the jitted program)."""
+        from .batched import get_batched_model
+        return get_batched_model(self.design, workload, template,
+                                 check_capacity=check_capacity)
+
+    def evaluate_batch(self, workload: Workload,
+                       nests: Sequence[LoopNest] | Iterable[LoopNest],
+                       check_capacity: bool = True) -> dict[str, np.ndarray]:
+        """Evaluate a population of mappings in one (or a few) jitted JAX
+        computations.
+
+        Candidates are grouped by loop-structure template; each group is
+        lowered to a dense (C, num_slots) bound array and evaluated with
+        the vectorized three-step model.  Returns per-candidate arrays
+        aligned with the input order: cycles, energy_pj, edp, valid,
+        compute_actual/gated/skipped.  Raises ``BatchedUnsupported`` when
+        the workload's density models have no traceable closed form — use
+        the scalar ``evaluate`` loop then.
+        """
+        from .batched import group_by_template
+        nests = list(nests)
+        out: dict[str, np.ndarray] = {}
+        for template, idxs in group_by_template(nests).items():
+            model = self.batched_model(workload, template, check_capacity)
+            bounds = np.stack([template.bounds_of(nests[i]) for i in idxs])
+            res = model.evaluate(bounds)
+            for k, v in res.items():
+                if k not in out:
+                    out[k] = np.zeros(
+                        len(nests),
+                        dtype=bool if k == "valid" else np.float64)
+                out[k][idxs] = v
+        return out
 
     # ------------------------------------------------------------------
     def cphc(self, workload: Workload, nest: LoopNest,

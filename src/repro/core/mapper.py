@@ -5,20 +5,34 @@ workload; this module enumerates/samples the mapspace (loop-bound
 factorizations x permutations) under user constraints and evaluates
 candidates with the analytical engine.
 
-`search` is exhaustive/sampled single-threaded Python; `best_of` is the
-convenience wrapper used by the benchmarks.  A vectorized JAX evaluator
-for large mapspaces lives in vmapper.py (a beyond-paper speed feature).
+Candidates sharing a loop structure are dispatched as one group to the
+batched JAX engine (core.batched) — one jitted computation per template —
+while the scalar ``Sparseloop.evaluate`` remains the per-candidate
+reference oracle (the winning mapping is always re-evaluated through it).
+``use_batched="auto"`` batches only groups large enough to amortize the
+jit compile; custom objectives or coordinate-dependent density models
+fall back to the scalar loop automatically.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import random
-from typing import Callable, Iterable, Sequence
+from typing import TYPE_CHECKING, Callable, Iterable, Sequence
+
+import numpy as np
 
 from .engine import Design, Evaluation, Sparseloop
 from .mapping import Loop, LoopNest, factor_splits
 from .workload import Workload
+
+if TYPE_CHECKING:        # core.batched (and jax) load lazily at dispatch
+    from .batched import NestTemplate
+
+#: smallest template group worth a jit compile under use_batched="auto"
+#: (compiles are seconds; scalar evaluations are ~a millisecond — small
+#: groups only pay off once the content-cache already holds the program)
+MIN_BATCH_GROUP = 64
 
 
 @dataclasses.dataclass
@@ -49,11 +63,13 @@ class SearchResult:
         return self.best.cycles if self.best else float("inf")
 
 
-def _nests(workload: Workload, num_levels: int,
-           cons: MapspaceConstraints) -> Iterable[LoopNest]:
-    """Generate candidate nests: factor each rank across levels, then
-    order loops within each level (sampled permutations)."""
-    rng = random.Random(cons.seed)
+def _split_combos(workload: Workload, num_levels: int,
+                  cons: MapspaceConstraints) -> list[tuple]:
+    """Shared candidate enumeration: the shuffled cross-product of
+    per-rank factor splits (combo[i][lvl] = temporal bound of rank i at
+    level lvl, innermost level first).  Both the scalar nest generator
+    and the array-lowering fast path consume this, so candidate sets and
+    ordering are identical across dispatch modes."""
     ranks = list(workload.rank_bounds)
     spatial = cons.spatial or {}
 
@@ -69,7 +85,18 @@ def _nests(workload: Workload, num_levels: int,
         r: list(factor_splits(residual[r], num_levels)) for r in ranks
     }
     combos = list(itertools.product(*[per_rank_splits[r] for r in ranks]))
-    rng.shuffle(combos)
+    random.Random(cons.seed).shuffle(combos)
+    return combos
+
+
+def _nests(workload: Workload, num_levels: int,
+           cons: MapspaceConstraints) -> Iterable[LoopNest]:
+    """Generate candidate nests: factor each rank across levels, then
+    order loops within each level (sampled permutations)."""
+    rng = random.Random(cons.seed)
+    ranks = list(workload.rank_bounds)
+    spatial = cons.spatial or {}
+    combos = _split_combos(workload, num_levels, cons)
 
     emitted = 0
     for combo in combos:
@@ -116,12 +143,43 @@ def _nests(workload: Workload, num_levels: int,
 
 def search(design: Design, workload: Workload,
            cons: MapspaceConstraints | None = None,
-           objective: Callable[[Evaluation], float] | None = None
-           ) -> SearchResult:
-    """Find the best valid mapping.  Default objective: EDP."""
+           objective: Callable[[Evaluation], float] | None = None,
+           use_batched: bool | str = "auto") -> SearchResult:
+    """Find the best valid mapping.  Default objective: EDP.
+
+    ``use_batched``: ``"auto"`` (default) dispatches to the batched JAX
+    engine only when a slice is big enough to amortize the jit compile
+    (>= ``MIN_BATCH_GROUP`` candidates — the whole budget when every
+    level's permutation is constrained, else per loop-structure group);
+    ``True`` batches everything regardless of size; ``False`` forces the
+    scalar loop.  A custom ``objective`` (which needs the full
+    per-candidate ``Evaluation``) and workloads whose density models
+    have no traceable closed form always use the scalar loop.
+    """
+    if use_batched not in (False, True, "auto"):
+        raise ValueError(f"use_batched must be False, True or 'auto', "
+                         f"got {use_batched!r}")
     cons = cons or MapspaceConstraints()
-    objective = objective or (lambda ev: ev.edp)
     model = Sparseloop(design)
+
+    if use_batched is not False and objective is None:
+        from .batched import batched_supported
+        if batched_supported(design, workload):
+            min_group = 0 if use_batched is True else MIN_BATCH_GROUP
+            template = _full_template(workload, design.arch.num_levels,
+                                      cons)
+            if template is not None:
+                res = _search_lowered(model, workload, cons, template,
+                                      min_candidates=min_group)
+                if res is not None:
+                    return res
+            else:
+                return _search_batched(
+                    model, workload,
+                    list(_nests(workload, design.arch.num_levels, cons)),
+                    min_group)
+
+    objective = objective or (lambda ev: ev.edp)
     best, best_nest, best_obj = None, None, float("inf")
     n_eval = n_valid = 0
     for nest in _nests(workload, design.arch.num_levels, cons):
@@ -136,6 +194,119 @@ def search(design: Design, workload: Workload,
         obj = objective(ev)
         if obj < best_obj:
             best, best_nest, best_obj = ev, nest, obj
+    return SearchResult(best=best, best_nest=best_nest,
+                        evaluated=n_eval, valid=n_valid)
+
+
+def _full_template(workload: Workload, num_levels: int,
+                   cons: MapspaceConstraints) -> "NestTemplate | None":
+    """When every level's permutation is constrained, ALL candidates embed
+    into one template (absent loops become unit bounds) — a single jit
+    compile covers the whole mapspace slice.  Returns None otherwise."""
+    if not cons.permutations:
+        return None
+    if any(lvl not in cons.permutations for lvl in range(num_levels)):
+        return None
+    from .batched import NestTemplate
+    ranks = list(workload.rank_bounds)
+    spatial = cons.spatial or {}
+    slots: list[tuple[str, int, bool]] = []
+    for lvl in range(num_levels - 1, -1, -1):
+        order = {r: i for i, r in enumerate(cons.permutations[lvl])}
+        slots += [(r, lvl, False)
+                  for r in sorted(ranks, key=lambda r: order.get(r, 99))]
+        slots += [(r, lvl, True)
+                  for r, b in spatial.get(lvl, {}).items() if b > 1]
+    return NestTemplate(slots=tuple(slots), num_levels=num_levels)
+
+
+def _search_lowered(model: Sparseloop, workload: Workload,
+                    cons: MapspaceConstraints, template: "NestTemplate",
+                    min_candidates: int = 0) -> SearchResult | None:
+    """Array-lowering fast path: the candidate population is generated
+    *directly* as a dense (C, num_slots) bound matrix — no LoopNest
+    objects until the winner is materialized.  One jitted computation
+    evaluates the entire budget; only the best mapping goes back through
+    the scalar oracle.  Returns None when the budget is below
+    ``min_candidates`` (not worth a jit compile — caller falls back to
+    the scalar loop)."""
+    ranks = list(workload.rank_bounds)
+    spatial = cons.spatial or {}
+    combos = _split_combos(workload, template.num_levels, cons)
+    combos = combos[: cons.budget]
+    if min_candidates and len(combos) < min_candidates:
+        return None
+    if not combos:
+        return SearchResult(best=None, best_nest=None, evaluated=0, valid=0)
+    # combo[i][lvl] = temporal bound of rank i at level lvl
+    arr = np.asarray(combos, np.int64)
+    bounds = np.ones((len(combos), template.num_slots), np.int64)
+    for j, (r, lvl, sp) in enumerate(template.slots):
+        if sp:
+            bounds[:, j] = spatial.get(lvl, {}).get(r, 1)
+        else:
+            bounds[:, j] = arr[:, ranks.index(r), lvl]
+    res = model.batched_model(workload, template).evaluate(bounds)
+
+    valid = np.asarray(res["valid"], dtype=bool)
+    n_valid = int(valid.sum())
+    if n_valid == 0:
+        return SearchResult(best=None, best_nest=None,
+                            evaluated=len(combos), valid=0)
+    best_idx = int(np.argmin(np.where(valid, res["edp"], np.inf)))
+    best_nest = template.nest_with(bounds[best_idx])
+    best = model.evaluate(workload, best_nest)
+    return SearchResult(best=best, best_nest=best_nest,
+                        evaluated=len(combos), valid=n_valid)
+
+
+def _search_batched(model: Sparseloop, workload: Workload,
+                    nests: list[LoopNest], min_group: int) -> SearchResult:
+    """Grouped dispatch: per-template batched EDP ranking, scalar oracle
+    for small groups and for the final winner."""
+    from .batched import group_by_template
+    C = len(nests)
+    edp = np.full(C, np.inf)
+    valid = np.zeros(C, dtype=bool)
+    n_eval = 0
+    scalar_idxs: list[int] = []
+
+    for template, idxs in group_by_template(nests).items():
+        if len(idxs) < max(1, min_group):
+            scalar_idxs.extend(idxs)
+            continue
+        bm = model.batched_model(workload, template)
+        bounds = np.stack([template.bounds_of(nests[i]) for i in idxs])
+        res = bm.evaluate(bounds)
+        edp[idxs] = res["edp"]
+        valid[idxs] = res["valid"]
+        n_eval += len(idxs)
+
+    for i in scalar_idxs:
+        try:
+            ev = model.evaluate(workload, nests[i])
+        except ValueError:
+            continue
+        n_eval += 1
+        if ev.result.valid:
+            edp[i] = ev.edp
+            valid[i] = True
+
+    return _rank_batched(model, workload, nests, edp, valid, n_eval)
+
+
+def _rank_batched(model: Sparseloop, workload: Workload,
+                  nests: Sequence[LoopNest], edp, valid,
+                  n_eval: int) -> SearchResult:
+    valid = np.asarray(valid, dtype=bool)
+    n_valid = int(valid.sum())
+    if n_valid == 0:
+        return SearchResult(best=None, best_nest=None,
+                            evaluated=n_eval, valid=0)
+    ranked = np.where(valid, edp, np.inf)
+    best_idx = int(np.argmin(ranked))   # first minimum: matches the
+    best_nest = nests[best_idx]         # scalar loop's tie-breaking
+    best = model.evaluate(workload, best_nest)
     return SearchResult(best=best, best_nest=best_nest,
                         evaluated=n_eval, valid=n_valid)
 

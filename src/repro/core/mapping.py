@@ -105,6 +105,15 @@ class LoopNest:
         return tuple(lp for lp in self.loops
                      if not lp.spatial and lp.level < level)
 
+    def structure(self) -> tuple[tuple[str, int, bool], ...]:
+        """(rank, level, spatial) slots with bounds stripped — the key the
+        batched engine (core.batched.NestTemplate) groups candidates by."""
+        return tuple((lp.rank, lp.level, lp.spatial) for lp in self.loops)
+
+    def bounds(self) -> tuple[int, ...]:
+        """Per-loop bounds, aligned with :meth:`structure`."""
+        return tuple(lp.bound for lp in self.loops)
+
     def describe(self) -> str:
         lines, indent = [], 0
         cur = None

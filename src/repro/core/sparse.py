@@ -111,6 +111,7 @@ def analyze_sparse(dense: DenseTraffic, safs: SAFSpec,
     with the mapping's level indices)."""
     workload = dense.workload
     S = dense.nest.num_levels
+    expanded = safs.expand_double_sided()
     if models is None:
         models = {
             t.name: make_density_model(workload.density_spec(t.name),
@@ -135,7 +136,7 @@ def analyze_sparse(dense: DenseTraffic, safs: SAFSpec,
         tile = max(1, leader.tile_size(bounds))
         return models[lname].prob_empty(tile)
 
-    for saf in safs.expand_double_sided():
+    for saf in expanded:
         if saf.level == "compute":
             for lname in saf.leaders:
                 p = 1.0 - models[lname].expected_density(1)
@@ -168,7 +169,7 @@ def analyze_sparse(dense: DenseTraffic, safs: SAFSpec,
     for s in range(S):
         r_skip: dict[str, float] = {}
         r_gate: dict[str, float] = {}
-        for saf in safs.expand_double_sided():
+        for saf in expanded:
             if saf.follower != zname or saf.level == "compute":
                 continue
             for lname in saf.leaders:
@@ -317,7 +318,7 @@ def analyze_sparse(dense: DenseTraffic, safs: SAFSpec,
     # regardless of the outcome.  Charged as metadata reads on the
     # follower's level.
     # ------------------------------------------------------------------
-    for saf in safs.expand_double_sided():
+    for saf in expanded:
         if saf.level == "compute":
             continue
         lvl = arch_level_names.index(saf.level)

@@ -1,52 +1,43 @@
-"""JAX-vectorized mapspace evaluation (beyond-paper speed feature).
+"""Vectorized two-level spMspM mapspace search — now a thin preset
+wrapper over the general batched engine (core.batched).
 
-Timeloop/Sparseloop evaluate one mapping at a time in C++; the paper's
-speed metric (CPHC) measures exactly this loop.  Because Sparseloop's
-three analysis steps are closed-form given the loop structure, an entire
-mapspace *slice* (every tiling of a fixed loop template) can be evaluated
-as one vmapped/jitted JAX computation — thousands of mappings per
-millisecond on CPU, more on accelerators.
-
-Template (the paper's Fig. 6/17 two-level spMspM structure, identical to
-the engine's test mapping):
+Historically this module froze the closed-form traffic/SAF/microarch
+equations of ONE hard-coded template (the paper's Fig. 6/17 two-level
+spMspM structure) into a hand-vectorized JAX function.  The batched
+engine generalizes those equations to arbitrary level counts, rank sets
+and ``SAFSpec``s, so all that remains here is the preset: the template
 
     L1:  for m1, for n1, parallel-for ns
     L0:  for n0, for k0(=K), for m0      -> MACs
 
-Design family: optionally CP/B-compressed A and B, `Skip B <- A` +
-`Skip Z <- A&B` at the Buffer, `Gate Compute` — i.e. the dense / bitmask
-/ coordlist designs of Fig. 1, parameterized.
+and the Fig.-1 design family knobs (:class:`VDesign`) lowered onto real
+``Design`` objects (dense / bitmask / coordinate-list).  Results now match
+the scalar engine *exactly* on sparse designs too (the old approximation
+only preserved ranking).
 
-`evaluate_batch` returns cycles & energy arrays aligned with the engine's
-`Sparseloop.evaluate` (tests/test_vmapper.py asserts equality); `search`
+``evaluate_batch`` returns per-candidate metric arrays; ``search``
 arg-mins over the full factorization cross-product.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
+import functools
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .arch import Architecture
+from .batched import NestTemplate
+from .engine import Design, Sparseloop
 from .mapping import factorize
-from .taxonomy import SAFSpec
+from .taxonomy import ActionSAF, RankFormat, SAFKind, SAFSpec, TensorFormat
+from .workload import matmul
 
-
-def _log_comb(n, k):
-    """log C(n,k), n/k float arrays; -inf where invalid."""
-    from jax.scipy.special import gammaln
-    valid = (k >= 0) & (k <= n) & (n >= 0)
-    out = gammaln(n + 1) - gammaln(k + 1) - gammaln(n - k + 1)
-    return jnp.where(valid, out, -jnp.inf)
-
-
-def p_empty(S, nnz, T):
-    """Uniform model: P(tile of T empty) = C(S-nnz, T)/C(S, T)."""
-    T = jnp.minimum(T, S)
-    return jnp.exp(_log_comb(S - nnz, T) - _log_comb(S, T))
+#: the Fig. 6/17 two-level spMspM loop structure; bounds order is
+#: (m1, n1, ns, n0, k0, m0) — unit bounds are treated as absent loops
+SPMSPM_TEMPLATE = NestTemplate(
+    slots=(("m", 1, False), ("n", 1, False), ("n", 1, True),
+           ("n", 0, False), ("k", 0, False), ("m", 0, False)),
+    num_levels=2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +48,39 @@ class VDesign:
     meta_bits_per_coord: float = 0.0  # B-style metadata (per dense coord)
     skip: bool = False          # Skip B<-A and Skip Z<-A&B at Buffer
     gate: bool = False          # Gate storage (B<-A) + Gate Compute
+
+    def to_design(self, arch: Architecture) -> Design:
+        """Lower the knobs onto a concrete SAF taxonomy Design (the
+        dense / bitmask / coordinate-list designs of Fig. 1)."""
+        fmts: dict[tuple[str, str], TensorFormat] = {}
+        if self.compress or self.meta_bits_per_coord > 0:
+            if self.meta_bits_per_coord > 0:
+                fmt = TensorFormat.of(RankFormat.B, RankFormat.B)
+            else:
+                cb = int(self.meta_bits_per_nnz // 2) or 16
+                fmt = TensorFormat.of(RankFormat.CP, RankFormat.CP,
+                                      coord_bits=cb)
+            for lvl in ("DRAM", "Buffer"):
+                fmts[(lvl, "A")] = fmt
+                fmts[(lvl, "B")] = fmt
+        actions: tuple[ActionSAF, ...] = ()
+        if self.skip:
+            actions = (
+                ActionSAF(SAFKind.SKIP, "Buffer", "B", ("A",)),
+                ActionSAF(SAFKind.SKIP, "Buffer", "Z", ("A", "B")),
+            )
+            if self.gate:
+                actions += (
+                    ActionSAF(SAFKind.GATE, "compute", "Z", ("A", "B")),)
+        elif self.gate:
+            actions = (
+                ActionSAF(SAFKind.GATE, "Buffer", "B", ("A",)),
+                ActionSAF(SAFKind.GATE, "compute", "Z", ("A", "B")),
+            )
+        name = ("coordlist" if self.skip else
+                "bitmask" if self.gate else "dense")
+        return Design(arch=arch, safs=SAFSpec(formats=fmts,
+                                              actions=actions), name=name)
 
 
 def candidate_factors(M: int, N: int, K: int, max_spatial: int = 64
@@ -71,133 +95,43 @@ def candidate_factors(M: int, N: int, K: int, max_spatial: int = 64
     return np.asarray(out, np.int64)
 
 
-def evaluate_batch(factors, M, N, K, dA, dB, arch: Architecture,
-                   design: VDesign):
-    """factors: (C, 5) int array -> dict of (C,) metrics."""
-    f = jnp.asarray(factors, jnp.float64) \
-        if jax.config.read("jax_enable_x64") else \
-        jnp.asarray(factors, jnp.float32)
+def _to_bounds(factors, K: int) -> np.ndarray:
+    """(C, 5) (m1, m0, n1, ns, n0) factors -> (C, 6) template bounds."""
+    f = np.asarray(factors, np.int64).reshape(-1, 5)
     m1, m0, n1, ns, n0 = (f[:, i] for i in range(5))
-    Mf, Nf, Kf = float(M), float(N), float(K)
-    nnzA, nnzB = round(dA * M * K), round(dB * K * N)
-
-    # ---------------- dense traffic (matches dataflow.py) ----------------
-    # reuse prefixes truncate at the innermost loop RELEVANT to the
-    # tensor; a bound-1 loop is no loop at all (stationarity boundary)
-    roundsB = jnp.where(n1 > 1, m1 * n1, 1.0)
-    fills0_A = m1 * m0 * Kf
-    reads1_A = m1 * m0 * Kf
-    reads0_A = m1 * n1 * n0 * Kf * m0
-    fills0_B = roundsB * Kf * n0
-    reads1_B = roundsB * Kf * n0 * ns
-    reads0_B = m1 * n1 * n0 * Kf
-    wb0_Z = m1 * n1 * m0 * n0
-    upd0_Z = m1 * n1 * n0 * Kf * m0
-    rmw0_Z = jnp.maximum(0.0, upd0_Z - m1 * n1 * m0 * n0)
-    upd1_Z = ns * m1 * n1 * m0 * n0
-    rmw1_Z = jnp.maximum(0.0, upd1_Z - Mf * Nf)
-    computes = Mf * Nf * Kf
-    inst0 = ns
-
-    # ---------------- sparse filtering ----------------
-    # leader tile for Skip B<-A at L0: trailing m0 loop -> A column of m0
-    pA_col = p_empty(Mf * Kf, nnzA, m0)
-    pA_el, pB_el = 1.0 - dA, 1.0 - dB
-    skip_B = design.skip * pA_col
-    # Z<-A&B at element granularity; compute elimination union
-    p_elim_c = 1.0 - (1.0 - jnp.maximum(design.skip * pA_el,
-                                        design.gate * pA_el)) * \
-        (1.0 - jnp.maximum(design.skip * pB_el, design.gate * pB_el))
-    if design.skip:
-        c_skip = 1.0 - (1.0 - pA_el) * (1.0 - pB_el)
-        c_gate = jnp.zeros_like(m1)
-    elif design.gate:
-        c_skip = jnp.zeros_like(m1)
-        c_gate = (1.0 - (1.0 - pA_el) * (1.0 - pB_el)) * jnp.ones_like(m1)
-    else:
-        c_skip = c_gate = jnp.zeros_like(m1)
-
-    dscaleA = dA if design.compress else 1.0
-    dscaleB = dB if design.compress else 1.0
-
-    # B reads at L0 carry the local SAF; fills/above unaffected
-    if design.skip:
-        b_live0 = 1.0 - skip_B
-        b_gate0 = 0.0
-    elif design.gate:
-        b_live0 = 1.0 - design.gate * pA_col
-        b_gate0 = design.gate * pA_col
-    else:
-        b_live0, b_gate0 = 1.0, 0.0
-
-    # metadata per compressed word
-    metaA = (design.meta_bits_per_nnz / 16.0
-             + design.meta_bits_per_coord / (16.0 * max(dA, 1e-9)))
-    metaB = (design.meta_bits_per_nnz / 16.0
-             + design.meta_bits_per_coord / (16.0 * max(dB, 1e-9)))
-    has_meta = design.compress or design.meta_bits_per_coord > 0
-
-    # Z update/wb survival: updates at element granularity follow compute
-    z_upd_act = 1.0 - c_skip - c_gate
-    # wb at tile granularity: leader window = whole L0 sub-nest -> ~1
-    lvl0 = arch.level(0)
-    lvl1 = arch.level(1)
-
-    # ---------------- assemble cycles & energy ----------------
-    rdA0 = reads0_A * dscaleA
-    rdB0 = reads0_B * dscaleB * (b_live0 + b_gate0)  # gated spend cycles
-    rdB0_act = reads0_B * dscaleB * b_live0
-    flA0 = fills0_A * dscaleA
-    flB0 = fills0_B * dscaleB
-    updZ0 = upd0_Z * z_upd_act + rmw0_Z * z_upd_act
-    l0_words = rdA0 + rdB0 + flA0 + flB0 + updZ0 + wb0_Z
-    meta0 = (rdA0 + flA0) * metaA + (rdB0 + flB0) * metaB if has_meta \
-        else 0.0
-    l0_cycles = (l0_words + meta0) / lvl0.bandwidth_words_per_cycle
-
-    rdA1 = reads1_A * dscaleA
-    rdB1 = reads1_B * dscaleB
-    updZ1 = upd1_Z * z_upd_act + rmw1_Z * z_upd_act
-    l1_words = rdA1 + rdB1 + updZ1
-    meta1 = rdA1 * metaA + rdB1 * metaB if has_meta else 0.0
-    l1_cycles = (l1_words + meta1) / lvl1.bandwidth_words_per_cycle
-
-    comp_act = computes * (1.0 - c_skip - c_gate)
-    comp_gate = computes * c_gate
-    pe = arch.compute
-    comp_cycles = (comp_act + comp_gate) / jnp.minimum(
-        inst0 * 1.0, float(pe.instances)) / pe.throughput
-
-    cycles = jnp.maximum(jnp.maximum(l0_cycles * 0 + l0_cycles,
-                                     l1_cycles), comp_cycles)
-
-    energy = (
-        inst0 * ((rdA0 + rdB0_act) * lvl0.read_energy_pj
-                 + (flA0 + flB0 + updZ0) * lvl0.write_energy_pj
-                 + wb0_Z * lvl0.read_energy_pj
-                 + (rdB0 - rdB0_act) * lvl0.gated_energy_pj
-                 + meta0 * lvl0.metadata_read_energy_pj)
-        + (rdA1 + rdB1) * lvl1.read_energy_pj
-        + updZ1 * lvl1.write_energy_pj
-        + meta1 * lvl1.metadata_read_energy_pj
-        + comp_act * pe.mac_energy_pj + comp_gate * pe.gated_energy_pj)
-
-    return {"cycles": cycles, "energy_pj": energy,
-            "edp": cycles * energy,
-            "compute_actual": comp_act, "compute_gated": comp_gate}
+    k = np.full_like(m1, K)
+    return np.stack([m1, n1, ns, n0, k, m0], axis=1)
 
 
-@jax.jit
-def _argmin(x):
-    return jnp.argmin(x)
+@functools.lru_cache(maxsize=64)
+def _model_for(M: int, N: int, K: int, dA: float, dB: float,
+               arch: Architecture, design: VDesign):
+    """Compiled batched evaluator, memoized so repeated calls (sweeps,
+    benchmarks) reuse the jitted program."""
+    wl = matmul(M, K, N, densities={"A": ("uniform", dA),
+                                    "B": ("uniform", dB)})
+    return Sparseloop(design.to_design(arch)).batched_model(
+        wl, SPMSPM_TEMPLATE, check_capacity=False)
+
+
+def evaluate_batch(factors, M: int, N: int, K: int, dA: float, dB: float,
+                   arch: Architecture, design: VDesign
+                   ) -> dict[str, np.ndarray]:
+    """factors: (C, 5) int array -> dict of (C,) metric arrays.
+
+    One jitted vmapped computation over the whole candidate set; values
+    match ``Sparseloop.evaluate`` on the equivalent Design exactly.
+    """
+    model = _model_for(M, N, K, dA, dB, arch, design)
+    out = model.evaluate(_to_bounds(factors, K))
+    out.pop("valid", None)
+    return out
 
 
 def search(M, N, K, dA, dB, arch, design: VDesign,
            objective: str = "edp"):
     cand = candidate_factors(M, N, K)
-    metrics = jax.jit(
-        lambda c: evaluate_batch(c, M, N, K, dA, dB, arch, design)
-    )(cand)
-    best = int(_argmin(metrics[objective]))
+    metrics = evaluate_batch(cand, M, N, K, dA, dB, arch, design)
+    best = int(np.argmin(metrics[objective]))
     return cand[best], {k: float(v[best]) for k, v in metrics.items()}, \
         len(cand)
