@@ -17,7 +17,8 @@ RESULTS_JSON = "BENCH_results.json"
 
 from . import (bench_fig1_formats, bench_fig11_scnn, bench_fig12_eyerissv2,
                bench_fig13_dstc, bench_fig15_16_stc_study,
-               bench_fig17_codesign, bench_kernels, bench_stc_exact,
+               bench_fig17_codesign, bench_kernels,
+               bench_search_convergence, bench_stc_exact,
                bench_table5_cphc, bench_table7_compression, bench_vmapper)
 from .common import emit
 
@@ -32,6 +33,7 @@ MODULES = [
     ("fig15_16_stc_study", bench_fig15_16_stc_study),
     ("fig17_codesign", bench_fig17_codesign),
     ("vmapper", bench_vmapper),
+    ("search_convergence", bench_search_convergence),
     ("kernels", bench_kernels),
 ]
 

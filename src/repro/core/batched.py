@@ -31,9 +31,15 @@ float64 round-off (tests/test_batched.py pins <=1e-6 relative); the
 scalar engine remains the per-candidate reference oracle.
 
 Density models must provide traceable statistics (``DensityModel.batched``
-— dense / uniform / structured).  Coordinate-dependent models (banded,
-actual data) raise :class:`BatchedUnsupported`; callers fall back to the
-scalar path.
+— dense / uniform / structured / banded).  Only the ``actual``-data model
+(which iterates a concrete numpy array) raises
+:class:`BatchedUnsupported`; callers fall back to the scalar path.
+
+When a candidate axis is large and several devices are visible,
+``BatchedModel.evaluate(bounds, mesh=...)`` shards the population across
+the mesh with ``shard_map`` (the version shim in
+``runtime/compression.py``): each device vmaps its slice of the
+population, so mapspace sweeps scale linearly with device count.
 """
 from __future__ import annotations
 
@@ -167,18 +173,52 @@ class BatchedModel:
                     f"density model for tensor {name!r} "
                     f"({type(m).__name__}) has no traceable closed form")
         self._fn = jax.jit(jax.vmap(self._single))
+        self._sharded_fns: dict = {}
 
     # ------------------------------------------------------------------
-    def evaluate(self, bounds) -> dict[str, np.ndarray]:
-        """bounds: (C, num_slots) -> dict of (C,) arrays."""
+    def evaluate(self, bounds, mesh=None) -> dict[str, np.ndarray]:
+        """bounds: (C, num_slots) -> dict of (C,) arrays.
+
+        With a ``jax.sharding.Mesh`` of > 1 devices, the candidate axis is
+        sharded across the mesh's (single) axis with ``shard_map`` — each
+        device vmaps its population slice; the population is padded (by
+        repeating the last candidate) to a multiple of the device count
+        and the padding is stripped from the returned arrays.
+        """
         bounds = np.asarray(bounds)
         if bounds.ndim != 2 or bounds.shape[1] != self.template.num_slots:
             raise ValueError(
                 f"bounds must be (C, {self.template.num_slots}), "
                 f"got {bounds.shape}")
         with enable_x64():
+            if mesh is not None and mesh.size > 1:
+                return self._evaluate_sharded(bounds, mesh)
             out = self._fn(jnp.asarray(bounds, jnp.float64))
             return {k: np.asarray(v) for k, v in out.items()}
+
+    def _evaluate_sharded(self, bounds: np.ndarray, mesh
+                          ) -> dict[str, np.ndarray]:
+        C, n = len(bounds), mesh.size
+        pad = (-C) % n
+        if pad:
+            bounds = np.concatenate(
+                [bounds, np.repeat(bounds[-1:], pad, axis=0)])
+        out = self._sharded_fn(mesh)(jnp.asarray(bounds, jnp.float64))
+        return {k: np.asarray(v)[:C] for k, v in out.items()}
+
+    def _sharded_fn(self, mesh):
+        key = (tuple(d.id for d in mesh.devices.flat), mesh.axis_names)
+        fn = self._sharded_fns.get(key)
+        if fn is None:
+            from jax.sharding import PartitionSpec as P
+
+            from ..runtime.compression import shard_map
+            spec = P(mesh.axis_names[0])
+            fn = jax.jit(shard_map(jax.vmap(self._single), mesh=mesh,
+                                   in_specs=(spec,), out_specs=spec,
+                                   check_vma=False))
+            self._sharded_fns[key] = fn
+        return fn
 
     # ------------------------------------------------------------------
     # The traced per-candidate program.  Mirrors analyze_dataflow /
@@ -660,7 +700,7 @@ def group_by_template(nests) -> dict[NestTemplate, list[int]]:
 
 def batched_supported(design, workload: Workload) -> bool:
     """True when every tensor's density model has a traceable closed form
-    (the batched path refuses coordinate-dependent models)."""
+    (the batched path refuses actual-data models)."""
     try:
         for t in workload.tensors:
             m = make_density_model(workload.density_spec(t.name),

@@ -52,9 +52,9 @@ def _log_comb_b(n, k):
 class BatchedDensityUnsupported(NotImplementedError):
     """Raised when a density model has no closed-form batched (JAX) path.
 
-    Coordinate-dependent models (banded, actual-data) iterate concrete
-    tile grids and cannot be traced; callers (core.batched) catch this and
-    fall back to the scalar engine.
+    Only the ``actual``-data model remains scalar-only: it iterates a
+    concrete numpy array and cannot be traced.  Callers (core.batched)
+    catch this and fall back to the scalar engine.
     """
 
 
@@ -236,11 +236,21 @@ class BandedModel(DensityModel):
     Coordinate-dependent: tiles on the diagonal are dense-ish, off-diagonal
     tiles are empty.  Tile statistics are derived analytically by counting
     band overlap over all aligned tile positions.
+
+    The ``*_b`` methods are traceable closed forms of the same counts: a
+    tile is nonempty iff the band's column footprint over the tile's rows,
+    ``[r0 - w, r0 + h - 1 + w]``, intersects the tile's column interval —
+    so the nonempty tiles of one row-strip form a contiguous ``tj`` range
+    computable with two integer divisions; expected density reduces to
+    the band population of the covered rectangle (one O(rows) masked
+    reduction).  This keeps banded workloads on the batched JAX engine;
+    only ``actual``-data models remain scalar-only.
     """
 
     rows: int
     cols: int
     half_band: int
+    batched = True
 
     @property
     def tensor_size(self) -> int:  # type: ignore[override]
@@ -305,6 +315,74 @@ class BandedModel(DensityModel):
 
     def max_band_nnz(self, tile_size: int) -> int:
         return min(tile_size, (2 * self.half_band + 1) * int(math.sqrt(tile_size)) + 1)
+
+    # ---------------- traceable closed forms (core.batched) ----------------
+    def _grid_b(self, tile_size):
+        """Traceable mirror of ``_tile_shape`` + aligned-grid setup.
+
+        Returns int64 scalars (t, tr, tc, nr, nc): ``tr`` is the largest
+        divisor of the tile size <= floor(sqrt(t)) (what the scalar
+        decrement loop finds), found by scanning the static divisor range
+        ``1..isqrt(rows * cols)``.
+        """
+        import jax.numpy as jnp
+        t = jnp.maximum(1.0, jnp.round(tile_size * 1.0)).astype(jnp.int64)
+        dmax = max(1, math.isqrt(max(1, self.rows * self.cols)))
+        d = jnp.arange(1, dmax + 1, dtype=jnp.int64)
+        root = jnp.floor(jnp.sqrt(t.astype(jnp.float64))).astype(jnp.int64)
+        ok = (t % d == 0) & (d <= root)
+        tr = jnp.max(jnp.where(ok, d, 1))
+        tc = t // tr
+        nr = jnp.maximum(1, self.rows // tr)
+        nc = jnp.maximum(1, self.cols // tc)
+        return t, tr, tc, nr, nc
+
+    def prob_empty_b(self, tile_size):
+        import jax.numpy as jnp
+        _, tr, tc, nr, nc = self._grid_b(tile_size)
+        w = self.half_band
+        ti = jnp.arange(self.rows, dtype=jnp.int64)
+        r0 = ti * tr
+        h = jnp.minimum(tr, self.rows - r0)
+        # nonempty tiles of row-strip ti: the band's column footprint
+        # [r0 - w, r0 + h - 1 + w] must meet [tj*tc, (tj+1)*tc - 1]
+        tj_hi = jnp.minimum(nc - 1, (r0 + h - 1 + w) // tc)
+        tj_lo = jnp.maximum(0, -((-(r0 - w - tc + 1)) // tc))
+        nonempty = jnp.clip(tj_hi - tj_lo + 1, 0, nc)
+        total = jnp.sum(jnp.where(ti < nr, nonempty, 0))
+        return (nr * nc - total) * 1.0 / (nr * nc)
+
+    def expected_density_b(self, tile_size):
+        import jax.numpy as jnp
+        t, tr, _tc, nr, nc = self._grid_b(tile_size)
+        w = self.half_band
+        i = jnp.arange(self.rows, dtype=jnp.int64)
+        covered_rows = jnp.minimum(nr * tr, self.rows)
+        covered_cols = nc * _tc          # c1 is never clamped to cols
+        ln = jnp.clip(jnp.minimum(covered_cols, i + w + 1)
+                      - jnp.maximum(0, i - w), 0, None)
+        nnz = jnp.sum(jnp.where(i < covered_rows, ln, 0))
+        return nnz * 1.0 / ((nr * nc) * 1.0 * t)
+
+    def max_nnz_b(self, tile_size):
+        import jax
+        import jax.numpy as jnp
+        t, tr, tc, nr, _nc = self._grid_b(tile_size)
+        w = self.half_band
+        i = jnp.arange(self.rows, dtype=jnp.int64)
+        ti = i // tr
+        r0 = ti * tr
+        # the densest aligned tile sits on the diagonal: slide each
+        # row-strip's column window to hug the band
+        c0 = jnp.clip(r0 - w, 0, jnp.maximum(0, self.cols - tc))
+        ln = jnp.clip(jnp.minimum(c0 + tc, i + w + 1)
+                      - jnp.maximum(c0, i - w), 0, None)
+        ln = jnp.where(i < jnp.minimum(nr * tr, self.rows), ln, 0)
+        per_tile = jax.ops.segment_sum(ln, ti, num_segments=self.rows)
+        best = jnp.max(per_tile)
+        root = jnp.floor(jnp.sqrt(t.astype(jnp.float64))).astype(jnp.int64)
+        fallback = jnp.minimum(t, (2 * w + 1) * root + 1)
+        return jnp.where(best > 0, jnp.minimum(t, best), fallback) * 1.0
 
 
 @dataclasses.dataclass

@@ -57,10 +57,38 @@ class SearchResult:
     best_nest: LoopNest | None
     evaluated: int
     valid: int
+    #: per-generation trajectory (repro.search.SearchLog) when the result
+    #: came from a stochastic strategy; None for enumeration
+    log: object | None = None
 
     @property
     def cycles(self) -> float:
         return self.best.cycles if self.best else float("inf")
+
+
+def spatial_residual(workload: Workload,
+                     spatial: dict[int, dict[str, int]] | None
+                     ) -> dict[str, int]:
+    """Per-rank bounds left to tile temporally after dividing out the
+    forced spatial factors.  Shared by the enumerating candidate
+    generator and the genome encoding (repro.search) so both describe
+    the identical mapspace slice."""
+    residual = dict(workload.rank_bounds)
+    for lvl, d in (spatial or {}).items():
+        for r, b in d.items():
+            if residual[r] % b:
+                raise ValueError(f"spatial bound {b} does not divide {r}")
+            residual[r] //= b
+    return residual
+
+
+def constrained_order(ranks: Sequence[str],
+                      order: Sequence[str]) -> tuple[str, ...]:
+    """All of ``ranks`` sorted by a (possibly partial) permutation
+    constraint; unmentioned ranks go last in their original order.
+    Shared by ``_full_template`` and the genome encoding."""
+    key = {r: i for i, r in enumerate(order)}
+    return tuple(sorted(ranks, key=lambda r: key.get(r, len(order) + 99)))
 
 
 def _split_combos(workload: Workload, num_levels: int,
@@ -71,15 +99,7 @@ def _split_combos(workload: Workload, num_levels: int,
     and the array-lowering fast path consume this, so candidate sets and
     ordering are identical across dispatch modes."""
     ranks = list(workload.rank_bounds)
-    spatial = cons.spatial or {}
-
-    # divide each rank bound by any forced spatial factors first
-    residual = dict(workload.rank_bounds)
-    for lvl, d in spatial.items():
-        for r, b in d.items():
-            if residual[r] % b:
-                raise ValueError(f"spatial bound {b} does not divide {r}")
-            residual[r] //= b
+    residual = spatial_residual(workload, cons.spatial)
 
     per_rank_splits = {
         r: list(factor_splits(residual[r], num_levels)) for r in ranks
@@ -143,9 +163,20 @@ def _nests(workload: Workload, num_levels: int,
 
 def search(design: Design, workload: Workload,
            cons: MapspaceConstraints | None = None,
-           objective: Callable[[Evaluation], float] | None = None,
-           use_batched: bool | str = "auto") -> SearchResult:
+           objective: Callable[[Evaluation], float] | str | None = None,
+           use_batched: bool | str = "auto",
+           strategy: object | None = None,
+           **strategy_kw) -> SearchResult:
     """Find the best valid mapping.  Default objective: EDP.
+
+    ``strategy``: ``None`` (default) keeps today's behavior — enumerate
+    ``cons.budget`` candidates.  A strategy name (``"es"``,
+    ``"hillclimb"``, ``"annealing"``, ``"random"``) or a
+    ``repro.search`` Strategy instance instead runs stochastic search
+    over the same mapspace slice at the same evaluation budget
+    (``repro.search.run_search``); extra keyword arguments (``key=``,
+    ``generations=``, ``pop_size=``, ``mesh=``, ...) pass through, and
+    the returned result carries its trajectory in ``result.log``.
 
     ``use_batched``: ``"auto"`` (default) dispatches to the batched JAX
     engine only when a slice is big enough to amortize the jit compile
@@ -159,6 +190,32 @@ def search(design: Design, workload: Workload,
     if use_batched not in (False, True, "auto"):
         raise ValueError(f"use_batched must be False, True or 'auto', "
                          f"got {use_batched!r}")
+    if strategy is not None:
+        if objective is not None and not isinstance(objective, str):
+            raise ValueError(
+                "strategy search optimizes a metric name ('edp', "
+                "'cycles' or 'energy_pj'); callable objectives need the "
+                "enumerating path (strategy=None)")
+        from ..search.runner import run_search
+        if use_batched != "auto" and "batch_threshold" not in strategy_kw:
+            # honour the dispatch override: True = batch every group,
+            # False = force the scalar loop
+            strategy_kw["batch_threshold"] = 0 if use_batched else 10 ** 18
+        return run_search(design, workload, cons=cons, strategy=strategy,
+                          metric=objective or "edp", **strategy_kw)
+    if strategy_kw:
+        raise TypeError(f"unexpected arguments {sorted(strategy_kw)} "
+                        f"(only valid with strategy=)")
+    if isinstance(objective, str):
+        if objective not in ("edp", "cycles", "energy_pj"):
+            raise ValueError(f"objective must be 'edp', 'cycles' or "
+                             f"'energy_pj' (or a callable), "
+                             f"got {objective!r}")
+        metric = objective
+        # "edp" is the built-in default; other metrics become accessors
+        # (and take the scalar loop, like any custom objective)
+        objective = (None if metric == "edp"
+                     else (lambda ev: getattr(ev, metric)))
     cons = cons or MapspaceConstraints()
     model = Sparseloop(design)
 
@@ -212,9 +269,9 @@ def _full_template(workload: Workload, num_levels: int,
     spatial = cons.spatial or {}
     slots: list[tuple[str, int, bool]] = []
     for lvl in range(num_levels - 1, -1, -1):
-        order = {r: i for i, r in enumerate(cons.permutations[lvl])}
         slots += [(r, lvl, False)
-                  for r in sorted(ranks, key=lambda r: order.get(r, 99))]
+                  for r in constrained_order(ranks,
+                                             cons.permutations[lvl])]
         slots += [(r, lvl, True)
                   for r, b in spatial.get(lvl, {}).items() if b > 1]
     return NestTemplate(slots=tuple(slots), num_levels=num_levels)
@@ -247,17 +304,10 @@ def _search_lowered(model: Sparseloop, workload: Workload,
         else:
             bounds[:, j] = arr[:, ranks.index(r), lvl]
     res = model.batched_model(workload, template).evaluate(bounds)
-
-    valid = np.asarray(res["valid"], dtype=bool)
-    n_valid = int(valid.sum())
-    if n_valid == 0:
-        return SearchResult(best=None, best_nest=None,
-                            evaluated=len(combos), valid=0)
-    best_idx = int(np.argmin(np.where(valid, res["edp"], np.inf)))
-    best_nest = template.nest_with(bounds[best_idx])
-    best = model.evaluate(workload, best_nest)
-    return SearchResult(best=best, best_nest=best_nest,
-                        evaluated=len(combos), valid=n_valid)
+    return _validated_result(model, workload,
+                             lambda i: template.nest_with(bounds[i]),
+                             edp=res["edp"], valid=res["valid"],
+                             n_eval=len(combos))
 
 
 def _search_batched(model: Sparseloop, workload: Workload,
@@ -298,17 +348,40 @@ def _search_batched(model: Sparseloop, workload: Workload,
 def _rank_batched(model: Sparseloop, workload: Workload,
                   nests: Sequence[LoopNest], edp, valid,
                   n_eval: int) -> SearchResult:
+    return _validated_result(model, workload, lambda i: nests[i],
+                             edp=edp, valid=valid, n_eval=n_eval)
+
+
+def _validated_result(model: Sparseloop, workload: Workload,
+                      nest_at: Callable[[int], LoopNest], edp, valid,
+                      n_eval: int,
+                      check_capacity: bool = True) -> SearchResult:
+    """Materialize the winner of a batched ranking, *validated through
+    the scalar oracle*: walk candidates best-EDP-first (stable order —
+    matches the scalar loop's tie-breaking) and return the first one the
+    reference model confirms valid.  Guards against batched/scalar drift
+    leaking a mapping the reference model rejects; a scalar-rejected
+    candidate is dropped from the valid count."""
     valid = np.asarray(valid, dtype=bool)
     n_valid = int(valid.sum())
     if n_valid == 0:
         return SearchResult(best=None, best_nest=None,
                             evaluated=n_eval, valid=0)
-    ranked = np.where(valid, edp, np.inf)
-    best_idx = int(np.argmin(ranked))   # first minimum: matches the
-    best_nest = nests[best_idx]         # scalar loop's tie-breaking
-    best = model.evaluate(workload, best_nest)
-    return SearchResult(best=best, best_nest=best_nest,
-                        evaluated=n_eval, valid=n_valid)
+    order = np.argsort(np.where(valid, edp, np.inf), kind="stable")
+    for idx in order[:n_valid]:
+        nest = nest_at(int(idx))
+        try:
+            best = model.evaluate(workload, nest,
+                                  check_capacity=check_capacity)
+        except ValueError:
+            n_valid -= 1
+            continue
+        if best.result.valid:
+            return SearchResult(best=best, best_nest=nest,
+                                evaluated=n_eval, valid=n_valid)
+        n_valid -= 1
+    return SearchResult(best=None, best_nest=None,
+                        evaluated=n_eval, valid=0)
 
 
 def best_of(design: Design, workload: Workload, budget: int = 500,

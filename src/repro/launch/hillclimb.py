@@ -1,67 +1,103 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
+"""Mapspace hillclimb launcher — stochastic search at production scale.
 
-"""Perf hillclimb runner: executes the §Perf iterations for the three
-selected cells at full production-mesh scale and records before/after
-roofline terms (EXPERIMENTS.md §Perf).
+Ported onto the ``repro.search`` subsystem: instead of replaying a fixed
+list of hand-picked perf experiments, this CLI runs any of the search
+strategies (hillclimb by default) over a design preset x matmul-layer
+mapspace, evaluating whole populations through the batched JAX engine
+and — when several devices are visible — sharding the population axis
+across them with ``shard_map``.
 
-Cells (chosen from the baseline roofline table):
-  A qwen2-0.5b   x train_4k   — worst meaningful roofline fraction (1.3%)
-  B command-r-35b x train_4k  — most collective-bound (12.7s, 100% coll)
-  C command-r-35b x decode_32k — paper-technique representative (weight
-                                 streaming; N:M format SAF target)
+Set ``REPRO_SEARCH_DEVICES=8`` to simulate a multi-device host on CPU
+(the flag must be read before jax initializes, which is why it is an
+environment variable and not a CLI argument).
 
-  PYTHONPATH=src python -m repro.launch.hillclimb [cellA cellB ...]
+  PYTHONPATH=src python -m repro.launch.hillclimb \\
+      --design scnn --mkn 3136 576 64 --densities 0.4 0.55 \\
+      --strategy hillclimb --budget 2048 --pop 64 --seed 0 \\
+      --out hillclimb_log.json
 """
+from __future__ import annotations
 
-import json
-import sys
+import os
 
-from repro.launch.dryrun import run_cell, save
+_FORCED = os.environ.get("REPRO_SEARCH_DEVICES")
+if _FORCED:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_FORCED} "
+        + os.environ.get("XLA_FLAGS", ""))
 
-EXPERIMENTS = {
-    # cell A: drop TP entirely for the small model
-    "A1": dict(arch="qwen2-0.5b", shape_name="train_4k",
-               mesh_kind="single", policy="dp_only", variant="dp_only"),
-    # cell B iteration 1: save dot results -> backward pass skips the
-    # forward recompute AND its TP all-reduces
-    "B1": dict(arch="command-r-35b", shape_name="train_4k",
-               mesh_kind="single", remat_policy="dots",
-               variant="remat_dots"),
-    # cell B iteration 2 (recorded refutation at reduced scale): fused
-    # parallel-block projection — re-measured at full scale
-    "B2": dict(arch="command-r-35b", shape_name="train_4k",
-               mesh_kind="single", cfg_overrides={"fused_proj": True},
-               variant="fused_proj"),
-    # cell B iteration 3: combine the winner(s)
-    "B3": dict(arch="command-r-35b", shape_name="train_4k",
-               mesh_kind="single", remat_policy="dots", policy="dp_only",
-               variant="remat_dots_dp"),
-    # cell C iteration 1: KV cache sequence-sharded (kv=8 heads do not
-    # divide the 16-way model axis -> baseline replicates the cache)
-    "C1": dict(arch="command-r-35b", shape_name="decode_32k",
-               mesh_kind="single", policy="kv_seq", variant="kv_seq"),
+import argparse
+import time
+
+from repro.core import matmul
+from repro.core.mapper import MapspaceConstraints
+from repro.core.presets import (bitmask_design, coordinate_list_design,
+                                dense_design, eyeriss_like, scnn_like,
+                                three_level_arch, two_level_arch)
+from repro.search import STRATEGIES, run_search
+
+DESIGNS = {
+    "dense": lambda: dense_design(two_level_arch()),
+    "bitmask": lambda: bitmask_design(two_level_arch()),
+    "coordlist": lambda: coordinate_list_design(two_level_arch()),
+    "eyeriss": lambda: eyeriss_like(three_level_arch()),
+    "scnn": lambda: scnn_like(three_level_arch()),
 }
 
 
-def main() -> None:
-    names = sys.argv[1:] or list(EXPERIMENTS)
-    for name in names:
-        exp = EXPERIMENTS[name]
-        print(f"--- hillclimb {name}: {exp} ---", flush=True)
-        rec = run_cell(**exp)
-        save(rec)
-        if rec["status"] == "ok":
-            coll = sum(v for k, v in rec["collectives"].items()
-                       if k != "count")
-            print(f"    dot_flops={rec['dot_flops']:.4g} "
-                  f"dot_bytes={rec['dot_bytes']:.4g} "
-                  f"coll_bytes={coll:.4g}", flush=True)
-        else:
-            print(f"    {rec['status']}: {rec.get('error', '')[:300]}",
-                  flush=True)
+def main(argv: list[str] | None = None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--design", choices=sorted(DESIGNS), default="scnn")
+    p.add_argument("--mkn", nargs=3, type=int, default=(3136, 576, 64),
+                   metavar=("M", "K", "N"),
+                   help="matmul layer dims (default: ResNet50 conv2_x)")
+    p.add_argument("--densities", nargs=2, type=float, default=(0.4, 0.55),
+                   metavar=("dA", "dB"))
+    p.add_argument("--strategy", choices=sorted(STRATEGIES),
+                   default="hillclimb")
+    p.add_argument("--budget", type=int, default=2048,
+                   help="total candidate evaluations")
+    p.add_argument("--pop", type=int, default=64)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--spatial-n", type=int, default=8,
+                   help="forced spatial fanout on rank n (0 = none)")
+    p.add_argument("--out", default="",
+                   help="write the SearchLog trajectory JSON here")
+    args = p.parse_args(argv)
+
+    import jax
+    M, K, N = args.mkn
+    dA, dB = args.densities
+    wl = matmul(M, K, N, densities={"A": ("uniform", dA),
+                                    "B": ("uniform", dB)})
+    design = DESIGNS[args.design]()
+    spatial = ({1: {"n": args.spatial_n}}
+               if args.spatial_n > 1 and N % args.spatial_n == 0 else None)
+    cons = MapspaceConstraints(budget=args.budget, seed=args.seed,
+                               spatial=spatial)
+
+    print(f"--- {args.strategy} on {args.design} x "
+          f"matmul({M},{K},{N}) d=({dA},{dB}) ---")
+    print(f"    devices={len(jax.devices())} budget={args.budget} "
+          f"pop={args.pop} seed={args.seed}", flush=True)
+    t0 = time.perf_counter()
+    res = run_search(design, wl, cons, strategy=args.strategy,
+                     key=args.seed, pop_size=args.pop)
+    dt = time.perf_counter() - t0
+
+    for rec in res.log.records:
+        print(f"    gen {rec.generation:3d}  evals {rec.evaluations:6d}  "
+              f"best EDP {rec.best_edp:.4e}", flush=True)
+    if res.best is None:
+        print(f"    no valid mapping found ({res.evaluated} evaluated)")
+        return
+    print(f"    best: cycles={res.best.cycles:.4g} "
+          f"energy={res.best.energy_pj:.4g}pJ EDP={res.best.edp:.4g}  "
+          f"({res.evaluated} evals, {res.valid} valid, {dt:.1f}s)")
+    print(res.best_nest.describe())
+    if args.out:
+        res.log.save(args.out)
+        print(f"    wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -61,14 +61,21 @@ class Heartbeat:
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
 
+    def _beat_once(self) -> None:
+        # write-to-temp + rename so a concurrent age() never reads a
+        # half-written (empty) file
+        tmp = self.path.with_suffix(self.path.suffix + ".tmp")
+        tmp.write_text(str(time.time()))
+        tmp.replace(self.path)
+
     def __enter__(self):
         self.path.parent.mkdir(parents=True, exist_ok=True)
 
         def beat():
             while not self._stop.wait(self.interval):
-                self.path.write_text(str(time.time()))
+                self._beat_once()
 
-        self.path.write_text(str(time.time()))
+        self._beat_once()
         self._thread = threading.Thread(target=beat, daemon=True)
         self._thread.start()
         return self

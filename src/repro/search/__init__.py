@@ -1,0 +1,32 @@
+"""repro.search: stochastic mapspace search on the batched engine.
+
+Layers on ``Sparseloop.evaluate_batch`` (PR 1) to turn "evaluate a
+mapping fast" into "find good mappings fast" (ROADMAP follow-up;
+SparseMap, arXiv 2508.12906):
+
+  * :mod:`encoding`   — flat genomes (prime-factor level assignment +
+    permutation indices) that always decode to valid divisor splits
+  * :mod:`strategies` — RandomSearch / HillClimb / SimulatedAnnealing /
+    EvolutionStrategy, all driven by explicit ``jax.random`` keys
+  * :mod:`runner`     — population evaluation through the batched engine,
+    sharded across devices with ``shard_map`` when available
+  * :mod:`log`        — JSON-serializable per-generation trajectory
+
+Entry points: :func:`run_search` here, or
+``repro.core.mapper.search(..., strategy="es")``.
+"""
+from .encoding import MapspaceEncoding, prime_factors
+from .log import GenerationRecord, SearchLog
+from .runner import PopulationEvaluator, population_mesh, run_search
+from .strategies import (STRATEGIES, EvolutionStrategy, HillClimb,
+                         RandomSearch, SimulatedAnnealing, Strategy,
+                         crossover, make_strategy, mutate)
+
+__all__ = [
+    "MapspaceEncoding", "prime_factors",
+    "GenerationRecord", "SearchLog",
+    "PopulationEvaluator", "population_mesh", "run_search",
+    "STRATEGIES", "EvolutionStrategy", "HillClimb", "RandomSearch",
+    "SimulatedAnnealing", "Strategy", "crossover", "make_strategy",
+    "mutate",
+]

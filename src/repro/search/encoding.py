@@ -1,0 +1,227 @@
+"""Genome encoding for stochastic mapspace search.
+
+A mapping candidate is flattened into an integer *genome* with two gene
+families:
+
+  * **factor genes** — one gene per prime-factor copy of each rank's
+    (spatial-residual) bound, valued in ``[0, num_levels)``: the storage
+    level that prime is assigned to.  The bound of rank ``r`` at level
+    ``l`` is the product of r's primes assigned to l, so *every* genome
+    decodes to a valid divisor split by construction — "repair" is just
+    folding out-of-range genes back into range (mod), never a projection
+    onto a divisor lattice.
+  * **permutation genes** — one gene per level whose loop order is not
+    pinned by :class:`MapspaceConstraints.permutations`, valued in
+    ``[0, R!)``: an index into the lexicographic permutations of the rank
+    list, fixing the temporal loop order within that level.
+
+Spatial loops are taken verbatim from the constraints (they describe the
+hardware fanout, not a search dimension), exactly as the enumerating
+mapper does.
+
+Decoding produces ``(NestTemplate, bounds-row)`` pairs: genomes sharing
+permutation genes share a template, so a whole population lowers onto a
+handful of jitted batched-engine programs (`core.batched`).  Levels are
+slotted with *all* ranks (unit bounds = absent loops), mirroring
+``mapper._full_template``.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+
+import numpy as np
+
+from ..core.batched import NestTemplate
+from ..core.mapper import (MapspaceConstraints, constrained_order,
+                           spatial_residual)
+from ..core.mapping import LoopNest
+from ..core.workload import Workload
+
+
+def prime_factors(n: int) -> list[int]:
+    """Prime factorization with multiplicity, largest primes first (so
+    single-gene mutations move the coarsest factors most often)."""
+    out: list[int] = []
+    d = 2
+    while d * d <= n:
+        while n % d == 0:
+            out.append(d)
+            n //= d
+        d += 1
+    if n > 1:
+        out.append(n)
+    return sorted(out, reverse=True)
+
+
+class MapspaceEncoding:
+    """Flat-genome view of one (workload, num_levels, constraints)
+    mapspace slice."""
+
+    def __init__(self, workload: Workload, num_levels: int,
+                 cons: MapspaceConstraints | None = None):
+        cons = cons or MapspaceConstraints()
+        self.workload = workload
+        self.num_levels = num_levels
+        self.cons = cons
+        self.ranks: list[str] = list(workload.rank_bounds)
+
+        self.residual = spatial_residual(workload, cons.spatial)
+
+        # factor genes: contiguous block of primes per rank
+        self._gene_prime: list[int] = []
+        self._rank_block: dict[str, slice] = {}
+        for r in self.ranks:
+            primes = prime_factors(self.residual[r])
+            self._rank_block[r] = slice(len(self._gene_prime),
+                                        len(self._gene_prime) + len(primes))
+            self._gene_prime.extend(primes)
+        self.num_factor_genes = len(self._gene_prime)
+
+        # permutation genes: levels whose order is not pinned
+        self.fixed_order: dict[int, tuple[str, ...]] = {}
+        if cons.permutations:
+            for lvl, order in cons.permutations.items():
+                self.fixed_order[lvl] = constrained_order(self.ranks,
+                                                          order)
+        self.perm_levels = [lvl for lvl in range(num_levels)
+                            if lvl not in self.fixed_order]
+        self.perms: list[tuple[int, ...]] = list(
+            itertools.permutations(range(len(self.ranks))))
+        self.genome_size = self.num_factor_genes + len(self.perm_levels)
+
+        #: per-gene cardinality (factor genes: levels; perm genes: R!)
+        self.cardinality = np.asarray(
+            [num_levels] * self.num_factor_genes
+            + [len(self.perms)] * len(self.perm_levels), np.int64)
+        #: per-gene crossover block id — factor-swap crossover exchanges
+        #: whole rank blocks (and whole permutation genes) between parents
+        self.gene_block = np.asarray(
+            [i for i, r in enumerate(self.ranks)
+             for _ in range(self._rank_block[r].stop
+                            - self._rank_block[r].start)]
+            + [len(self.ranks) + i for i in range(len(self.perm_levels))],
+            np.int64)
+        self.num_blocks = len(self.ranks) + len(self.perm_levels)
+
+    # ------------------------------------------------------------------
+    def repair(self, genomes: np.ndarray) -> np.ndarray:
+        """Fold every gene into its valid range.  Because factor genes are
+        level *assignments* of primes, any in-range genome is a valid
+        divisor split — repair never has to reproject."""
+        g = np.asarray(genomes, np.int64)
+        return np.mod(g, self.cardinality)
+
+    def random_population(self, key, n: int) -> np.ndarray:
+        """(n, genome_size) uniform population from a jax.random key."""
+        import jax.random as jrandom
+        if self.genome_size == 0:
+            return np.zeros((n, 0), np.int64)
+        draw = jrandom.randint(key, (n, self.genome_size), 0,
+                               np.asarray(self.cardinality))
+        return np.asarray(draw, np.int64)
+
+    def structured_population(self, key, n: int) -> np.ndarray:
+        """Block-structured genomes: each rank's primes split between at
+        most two levels at a random cut — the shape real tilings take
+        (one large block per level).  Uniform per-prime assignment almost
+        never produces such corners, so adaptive strategies seed their
+        initial population from here (plus uniform genomes for
+        diversity); see ``strategies.init_population``."""
+        import jax.random as jrandom
+        out = np.zeros((n, self.genome_size), np.int64)
+        if self.genome_size == 0:
+            return out
+        keys = jrandom.split(key, len(self.ranks) + 1)
+        for ri, r in enumerate(self.ranks):
+            blk = self._rank_block[r]
+            g = blk.stop - blk.start
+            if g == 0:
+                continue
+            ka, kb, ks = jrandom.split(keys[ri], 3)
+            la = np.asarray(jrandom.randint(ka, (n,), 0, self.num_levels))
+            lb = np.asarray(jrandom.randint(kb, (n,), 0, self.num_levels))
+            cut = np.asarray(jrandom.randint(ks, (n,), 0, g + 1))
+            cols = np.arange(g)
+            out[:, blk] = np.where(cols[None, :] < cut[:, None],
+                                   la[:, None], lb[:, None])
+        if self.perm_levels:
+            out[:, self.num_factor_genes:] = np.asarray(jrandom.randint(
+                keys[-1], (n, len(self.perm_levels)), 0, len(self.perms)))
+        return out
+
+    # ------------------------------------------------------------------
+    def _level_order(self, lvl: int, perm_genes: np.ndarray) -> tuple:
+        if lvl in self.fixed_order:
+            return self.fixed_order[lvl]
+        g = int(perm_genes[self.perm_levels.index(lvl)])
+        return tuple(self.ranks[i] for i in self.perms[g])
+
+    def template_of(self, genome: np.ndarray) -> NestTemplate:
+        """The loop structure this genome instantiates (bounds stripped;
+        shared by all genomes with equal permutation genes)."""
+        perm_genes = np.asarray(genome, np.int64)[self.num_factor_genes:]
+        spatial = self.cons.spatial or {}
+        slots: list[tuple[str, int, bool]] = []
+        for lvl in range(self.num_levels - 1, -1, -1):
+            slots += [(r, lvl, False)
+                      for r in self._level_order(lvl, perm_genes)]
+            slots += [(r, lvl, True)
+                      for r, b in spatial.get(lvl, {}).items() if b > 1]
+        return NestTemplate(slots=tuple(slots), num_levels=self.num_levels)
+
+    def bounds_of(self, genomes: np.ndarray,
+                  template: NestTemplate) -> np.ndarray:
+        """(k, num_slots) per-slot bound matrix for genomes that share
+        ``template`` (vectorized prime-product decode)."""
+        g = np.atleast_2d(np.asarray(genomes, np.int64))
+        spatial = self.cons.spatial or {}
+        bounds = np.ones((len(g), template.num_slots), np.int64)
+        for j, (r, lvl, sp) in enumerate(template.slots):
+            if sp:
+                bounds[:, j] = spatial.get(lvl, {}).get(r, 1)
+                continue
+            blk = self._rank_block[r]
+            if blk.stop == blk.start:
+                continue                      # unit-bound rank: stays 1
+            primes = np.asarray(self._gene_prime[blk], np.int64)
+            assigned = g[:, blk] == lvl
+            bounds[:, j] = np.prod(np.where(assigned, primes, 1), axis=1)
+        return bounds
+
+    def decode_population(self, genomes: np.ndarray
+                          ) -> list[tuple[NestTemplate, np.ndarray,
+                                          np.ndarray]]:
+        """Group a (n, G) population by template: list of
+        ``(template, original-indices, bounds)`` triples."""
+        g = self.repair(genomes)
+        perm = g[:, self.num_factor_genes:]
+        groups: dict[tuple, list[int]] = {}
+        for i, row in enumerate(perm):
+            groups.setdefault(tuple(row.tolist()), []).append(i)
+        out = []
+        for _, idxs in sorted(groups.items()):
+            idx = np.asarray(idxs, np.int64)
+            template = self.template_of(g[idx[0]])
+            out.append((template, idx, self.bounds_of(g[idx], template)))
+        return out
+
+    def nest_of(self, genome: np.ndarray) -> LoopNest:
+        """Materialize the concrete LoopNest (unit loops dropped)."""
+        g = self.repair(np.asarray(genome, np.int64).reshape(1, -1))[0]
+        template = self.template_of(g)
+        return template.nest_with(self.bounds_of(g, template)[0])
+
+    # ------------------------------------------------------------------
+    @property
+    def mapspace_size(self) -> float:
+        """|factor assignments| x |free permutations| (log-safe float)."""
+        size = float(self.num_levels) ** self.num_factor_genes
+        size *= float(len(self.perms)) ** len(self.perm_levels)
+        return size
+
+    def describe(self) -> str:
+        return (f"{self.genome_size} genes ({self.num_factor_genes} factor"
+                f" + {len(self.perm_levels)} permutation), "
+                f"~{self.mapspace_size:.3g} mappings, "
+                f"{math.prod(self.residual.values())} iteration points")

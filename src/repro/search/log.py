@@ -1,0 +1,94 @@
+"""SearchLog: the per-generation trajectory record of one search run.
+
+Benches serialize it to JSON (``BENCH_search_convergence.json``) so
+quality-per-budget curves are tracked per-PR, and the reproducibility
+contract is stated on it directly: same strategy + same PRNG key =>
+byte-identical ``to_json()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+
+@dataclasses.dataclass
+class GenerationRecord:
+    """Best-so-far metrics after one generation (cumulative)."""
+
+    generation: int
+    evaluations: int          # cumulative candidates evaluated
+    valid: int                # cumulative valid candidates
+    best_fitness: float       # best-so-far of the optimized metric
+    best_cycles: float
+    best_energy_pj: float
+    best_edp: float
+
+
+@dataclasses.dataclass
+class SearchLog:
+    strategy: str
+    metric: str
+    workload: str = ""
+    design: str = ""
+    seed: int | None = None
+    records: list[GenerationRecord] = dataclasses.field(
+        default_factory=list)
+
+    def append(self, rec: GenerationRecord) -> None:
+        self.records.append(rec)
+
+    # ------------------------------------------------------------------
+    @property
+    def best_fitness(self) -> float:
+        return (self.records[-1].best_fitness if self.records
+                else float("inf"))
+
+    @property
+    def evaluations(self) -> int:
+        return self.records[-1].evaluations if self.records else 0
+
+    def trajectory(self, field: str = "best_fitness") -> list[float]:
+        """Per-generation series of ``field``.  Only the optimized
+        metric is monotone non-increasing by construction
+        (``best_fitness``, and the matching ``best_<metric>`` column —
+        what the CI search-smoke step asserts); the other metric
+        columns describe the best-fitness candidate and may move either
+        way."""
+        return [getattr(r, field) for r in self.records]
+
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "strategy": self.strategy,
+            "metric": self.metric,
+            "workload": self.workload,
+            "design": self.design,
+            "seed": self.seed,
+            "records": [dataclasses.asdict(r) for r in self.records],
+        }
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, **kw)
+
+    @staticmethod
+    def from_dict(d: dict[str, Any]) -> "SearchLog":
+        return SearchLog(
+            strategy=d["strategy"], metric=d["metric"],
+            workload=d.get("workload", ""), design=d.get("design", ""),
+            seed=d.get("seed"),
+            records=[GenerationRecord(**r) for r in d.get("records", [])])
+
+    @staticmethod
+    def from_json(s: str) -> "SearchLog":
+        return SearchLog.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=2))
+            f.write("\n")
+
+    @staticmethod
+    def load(path: str) -> "SearchLog":
+        with open(path) as f:
+            return SearchLog.from_json(f.read())

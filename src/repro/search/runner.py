@@ -1,0 +1,203 @@
+"""Search runner: drives an ask/tell strategy over the batched engine.
+
+Each generation the strategy proposes a genome population; the runner
+decodes it into (template, bounds) groups and evaluates every group as
+one jitted batched computation (`core.batched.BatchedModel`).  When more
+than one device is visible the population axis is sharded across them
+with ``shard_map`` (``mesh="auto"``); a single device falls back to the
+plain ``vmap`` path — both produce identical metric arrays, so the
+search trajectory is device-count independent (the convergence bench
+pins single-device vs multi-shard to <= 1e-6 relative).
+
+Workloads whose density models have no traceable closed form
+(actual-data) transparently fall back to per-candidate scalar
+evaluation — same search, slower fitness.
+
+The returned :class:`mapper.SearchResult` carries the winning mapping
+*validated through the scalar oracle*: the runner keeps a small archive
+of the best genomes seen and walks it best-first through
+``Sparseloop.evaluate`` until the reference model confirms validity, so
+batched/scalar drift can never leak a mapping the oracle rejects.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.batched import batched_supported
+from ..core.engine import Sparseloop
+from ..core.mapper import MapspaceConstraints, SearchResult, _validated_result
+from ..core.workload import Workload
+from .encoding import MapspaceEncoding
+from .log import GenerationRecord, SearchLog
+from .strategies import Strategy, make_strategy
+
+METRICS = ("edp", "cycles", "energy_pj")
+
+#: archive depth for the final scalar-oracle validation walk
+ARCHIVE_SIZE = 32
+
+
+def population_mesh(min_devices: int = 2):
+    """Mesh over all visible devices (axis "pop"), or None when there are
+    fewer than ``min_devices`` — the single-device vmap fallback."""
+    import jax
+    devices = jax.devices()
+    if len(devices) < min_devices:
+        return None
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices), ("pop",))
+
+
+#: smallest per-template group handed to the batched engine: a jit
+#: compile costs seconds while a scalar evaluation costs ~a millisecond,
+#: so tiny groups (populations scattered across many permutation
+#: templates) run scalar.  Dispatch depends only on group sizes — never
+#: on jit-cache state — so a run stays bit-reproducible from its key.
+BATCH_THRESHOLD = 32
+
+
+class PopulationEvaluator:
+    """Fitness function over genome populations: decode -> group by
+    template -> batched (optionally sharded) evaluation, with a scalar
+    path for groups too small to amortize a compile and for workloads
+    with no traceable density model (actual-data)."""
+
+    def __init__(self, design, workload: Workload, enc: MapspaceEncoding,
+                 mesh=None, check_capacity: bool = True,
+                 batch_threshold: int = BATCH_THRESHOLD):
+        self.model = Sparseloop(design)
+        self.workload = workload
+        self.enc = enc
+        self.mesh = mesh
+        self.check_capacity = check_capacity
+        self.batch_threshold = batch_threshold
+        self.batched = batched_supported(design, workload)
+
+    def __call__(self, genomes: np.ndarray) -> dict[str, np.ndarray]:
+        n = len(genomes)
+        out = {k: np.full(n, np.inf) for k in METRICS}
+        out["valid"] = np.zeros(n, dtype=bool)
+        for template, idx, bounds in self.enc.decode_population(genomes):
+            if self.batched and len(idx) >= max(1, self.batch_threshold):
+                bm = self.model.batched_model(
+                    self.workload, template,
+                    check_capacity=self.check_capacity)
+                res = bm.evaluate(bounds, mesh=self.mesh)
+                for k in METRICS:
+                    out[k][idx] = res[k]
+                out["valid"][idx] = res["valid"]
+            else:           # small group or scalar-only density model
+                for i, b in zip(idx, bounds):
+                    try:
+                        ev = self.model.evaluate(
+                            self.workload, template.nest_with(b),
+                            check_capacity=self.check_capacity)
+                    except ValueError:
+                        continue
+                    out["cycles"][i] = ev.cycles
+                    out["energy_pj"][i] = ev.energy_pj
+                    out["edp"][i] = ev.edp
+                    out["valid"][i] = ev.result.valid
+        return out
+
+
+def run_search(design, workload: Workload,
+               cons: MapspaceConstraints | None = None,
+               strategy: "str | Strategy" = "es", *,
+               key: "int | object" = 0,
+               generations: int | None = None,
+               metric: str = "edp",
+               mesh="auto",
+               check_capacity: bool = True,
+               batch_threshold: int = BATCH_THRESHOLD,
+               log_to: SearchLog | None = None,
+               **strategy_options) -> SearchResult:
+    """Stochastic mapspace search.  Returns a ``SearchResult`` whose
+    ``log`` attribute holds the per-generation trajectory.
+
+    ``key`` is an int seed or an explicit ``jax.random`` key — the whole
+    run is bit-reproducible from it.  ``generations`` defaults to
+    ``cons.budget // pop_size`` so enumeration and stochastic search are
+    comparable at equal evaluation budget.  ``mesh="auto"`` shards the
+    population axis across all visible devices (>= 2); pass ``None`` to
+    force the single-device vmap path or a ``jax.sharding.Mesh`` to
+    control placement.
+    """
+    import jax.random as jrandom
+
+    if metric not in METRICS:
+        raise ValueError(f"metric must be one of {METRICS}, got {metric!r}")
+    cons = cons or MapspaceConstraints()
+    strat = make_strategy(strategy, **strategy_options)
+    enc = MapspaceEncoding(workload, design.arch.num_levels, cons)
+    if mesh == "auto":
+        mesh = population_mesh()
+    evaluate = PopulationEvaluator(design, workload, enc, mesh=mesh,
+                                   check_capacity=check_capacity,
+                                   batch_threshold=batch_threshold)
+
+    seed = key if isinstance(key, (int, np.integer)) else None
+    if seed is not None:
+        key = jrandom.PRNGKey(int(seed))
+    if generations is None:
+        # honour cons.budget as a hard cap: shrink the population when
+        # it exceeds the whole budget, then spend it in full generations
+        if strat.pop_size > cons.budget > 0:
+            strat = make_strategy(strat, pop_size=cons.budget)
+        generations = max(1, cons.budget // max(1, strat.pop_size))
+    state = strat.init(key, enc)
+
+    log = log_to or SearchLog(strategy=strat.name, metric=metric,
+                              workload=workload.name,
+                              design=design.name or design.arch.name,
+                              seed=None if seed is None else int(seed))
+    archive_fit: list[float] = []
+    archive_gen: list[np.ndarray] = []
+    seen: set[bytes] = set()
+    best = {"fitness": np.inf, "cycles": np.inf, "energy_pj": np.inf,
+            "edp": np.inf}
+    n_eval = n_valid = 0
+
+    for gen in range(generations):
+        genomes = enc.repair(strat.ask(state, enc))
+        res = evaluate(genomes)
+        fitness = np.where(res["valid"], res[metric], np.inf)
+        strat.tell(state, enc, genomes, fitness)
+
+        n_eval += len(genomes)
+        n_valid += int(res["valid"].sum())
+        i = int(np.argmin(fitness))
+        if fitness[i] < best["fitness"]:
+            best = {"fitness": float(fitness[i]),
+                    "cycles": float(res["cycles"][i]),
+                    "energy_pj": float(res["energy_pj"][i]),
+                    "edp": float(res["edp"][i])}
+        for j in np.argsort(fitness, kind="stable")[:ARCHIVE_SIZE]:
+            if not np.isfinite(fitness[j]):
+                break
+            b = genomes[j].tobytes()
+            if b not in seen:
+                seen.add(b)
+                archive_fit.append(float(fitness[j]))
+                archive_gen.append(genomes[j].copy())
+        if len(archive_fit) > 4 * ARCHIVE_SIZE:   # keep the walk short
+            order = np.argsort(archive_fit, kind="stable")[:ARCHIVE_SIZE]
+            archive_fit = [archive_fit[k] for k in order]
+            archive_gen = [archive_gen[k] for k in order]
+
+        log.append(GenerationRecord(
+            generation=gen, evaluations=n_eval, valid=n_valid,
+            best_fitness=best["fitness"], best_cycles=best["cycles"],
+            best_energy_pj=best["energy_pj"], best_edp=best["edp"]))
+
+    # scalar-oracle validation of the winner (best-first archive walk)
+    order = np.argsort(archive_fit, kind="stable")[:ARCHIVE_SIZE]
+    result = _validated_result(
+        evaluate.model, workload,
+        lambda i: enc.nest_of(archive_gen[order[i]]),
+        edp=np.asarray([archive_fit[k] for k in order]),
+        valid=np.ones(len(order), dtype=bool),
+        n_eval=n_eval, check_capacity=check_capacity)
+    result.valid = n_valid
+    result.log = log
+    return result

@@ -77,9 +77,29 @@ def test_evaluate_batch_groups_mixed_templates():
         assert out["cycles"][i] == pytest.approx(ev.cycles, rel=1e-6)
 
 
-def test_unsupported_density_model_raises():
+def test_parity_banded_density():
+    """Banded workloads now run on the batched engine (closed-form
+    coordinate-dependent statistics) — parity with the scalar oracle."""
     wl = matmul(M, K, N, densities={
-        "A": ("banded", {"rows": M, "cols": K, "half_band": 2})})
+        "A": ("banded", {"rows": M, "cols": K, "half_band": 2}),
+        "B": ("uniform", DB)})
+    design = coordinate_list_design(ARCH)
+    model = Sparseloop(design)
+    bounds = _bounds()[::3]
+    out = model.batched_model(wl, SPMSPM_TEMPLATE,
+                              check_capacity=False).evaluate(bounds)
+    for i, b in enumerate(bounds):
+        ev = model.evaluate(wl, SPMSPM_TEMPLATE.nest_with(b),
+                            check_capacity=False)
+        assert out["cycles"][i] == pytest.approx(ev.cycles, rel=1e-6)
+        assert out["energy_pj"][i] == pytest.approx(ev.energy_pj,
+                                                    rel=1e-6)
+
+
+def test_unsupported_density_model_raises():
+    """actual-data models remain the only scalar-only density model."""
+    wl = matmul(M, K, N, densities={
+        "A": ("actual", np.ones((M, K)))})
     model = Sparseloop(dense_design(ARCH))
     with pytest.raises(BatchedUnsupported):
         model.batched_model(wl, SPMSPM_TEMPLATE)

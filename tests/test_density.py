@@ -88,6 +88,42 @@ def test_structured_prob_empty_monotone(m_block):
     assert probs[-1] == 0.0 or m_block == 1
 
 
+def test_banded_batched_closed_forms_match_scalar():
+    """The traceable banded expressions reproduce the scalar grid-count
+    loops exactly (prob_empty / expected_density / max_nnz)."""
+    from jax.experimental import enable_x64
+    with enable_x64():
+        for (rows, cols, w) in [(64, 64, 2), (64, 48, 5), (37, 53, 3),
+                                (16, 16, 0), (8, 64, 7)]:
+            m = BandedModel(rows=rows, cols=cols, half_band=w)
+            for t in (1, 2, 3, 4, 6, 8, 16, 25, 30, 64, 100, 255, 256,
+                      512, rows * cols):
+                assert float(m.prob_empty_b(float(t))) == pytest.approx(
+                    m.prob_empty(t), abs=1e-12), (rows, cols, w, t)
+                assert float(m.expected_density_b(float(t))) == \
+                    pytest.approx(m.expected_density(t),
+                                  rel=1e-9), (rows, cols, w, t)
+                assert float(m.max_nnz_b(float(t))) == m.max_nnz(t), \
+                    (rows, cols, w, t)
+
+
+def test_banded_batched_traceable_under_vmap():
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    m = BandedModel(rows=32, cols=32, half_band=2)
+    assert m.batched
+    with enable_x64():
+        tiles = jnp.asarray([1.0, 4.0, 16.0, 64.0, 256.0])
+        pe = jax.jit(jax.vmap(m.prob_empty_b))(tiles)
+        ed = jax.jit(jax.vmap(m.expected_density_b))(tiles)
+        for t, a, b in zip(tiles, pe, ed):
+            assert float(a) == pytest.approx(m.prob_empty(int(t)),
+                                             abs=1e-12)
+            assert float(b) == pytest.approx(m.expected_density(int(t)),
+                                             rel=1e-9)
+
+
 def test_make_density_model_dispatch():
     assert isinstance(make_density_model(None, 10), DenseModel)
     assert isinstance(make_density_model(("uniform", 0.5), 10), UniformModel)

@@ -40,6 +40,65 @@ def test_mapper_better_than_naive():
 
 
 # ----------------------------------------------------------------------
+# MapspaceConstraints edge cases (enumeration AND strategy paths)
+# ----------------------------------------------------------------------
+def _one_level_design():
+    from repro.core.arch import (Architecture, ComputeLevel,
+                                 StorageLevel)
+    arch = Architecture(
+        name="flat",
+        levels=(StorageLevel("Mem", float("inf"), 64, 10.0, 10.0, 0.1),),
+        compute=ComputeLevel("MAC", instances=16, mac_energy_pj=1.0,
+                             gated_energy_pj=0.05))
+    return dense_design(arch)
+
+
+@pytest.mark.parametrize("strategy", [None, "es"])
+def test_empty_permutation_constraint(strategy):
+    """permutations={} must behave exactly like no constraint (every
+    level's order is free), not crash or pin anything."""
+    wl = matmul(8, 8, 8)
+    design = dense_design(two_level_arch())
+    cons = MapspaceConstraints(budget=32, seed=0, permutations={})
+    kw = {} if strategy is None else {"strategy": strategy, "key": 0}
+    res = search(design, wl, cons, **kw)
+    assert res.best is not None and res.best.result.valid
+    res.best_nest.validate(wl)
+
+
+@pytest.mark.parametrize("strategy", [None, "hillclimb"])
+def test_single_level_design(strategy):
+    """num_levels == 1: the only factor split is the full bound at L0 and
+    the mapspace is pure permutation."""
+    wl = matmul(4, 8, 4)
+    design = _one_level_design()
+    cons = MapspaceConstraints(budget=16, seed=0)
+    kw = {} if strategy is None else {"strategy": strategy, "key": 0}
+    res = search(design, wl, cons, **kw)
+    assert res.best is not None and res.best.result.valid
+    res.best_nest.validate(wl)
+    assert res.best_nest.num_levels == 1
+    prod = {}
+    for lp in res.best_nest.loops:
+        prod[lp.rank] = prod.get(lp.rank, 1) * lp.bound
+    assert prod == {r: b for r, b in wl.rank_bounds.items() if b > 1}
+
+
+@pytest.mark.parametrize("strategy", [None, "es"])
+def test_unit_bound_ranks(strategy):
+    """Ranks with bound 1 (matmul(1, K, N): degenerate m) never emit
+    loops but must not break enumeration or genome encoding."""
+    wl = matmul(1, 16, 8, densities={"A": ("uniform", 0.5)})
+    design = dense_design(two_level_arch())
+    cons = MapspaceConstraints(budget=32, seed=0)
+    kw = {} if strategy is None else {"strategy": strategy, "key": 0}
+    res = search(design, wl, cons, **kw)
+    assert res.best is not None and res.best.result.valid
+    res.best_nest.validate(wl)
+    assert all(lp.rank != "m" for lp in res.best_nest.loops)
+
+
+# ----------------------------------------------------------------------
 # Format models (Sec. 5.3.3 formulas)
 # ----------------------------------------------------------------------
 def test_bitmask_overhead_density_independent():

@@ -1,0 +1,279 @@
+"""repro.search subsystem: genome encoding validity, strategy
+reproducibility (same PRNG key => identical SearchLog), trajectory
+monotonicity, mapper integration, oracle-validated winners, and
+single-device vs sharded parity."""
+import os
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import jax.random as jrandom
+import numpy as np
+import pytest
+
+from repro.core import matmul
+from repro.core.mapper import (MapspaceConstraints, SearchResult,
+                               _validated_result, search)
+from repro.core.presets import coordinate_list_design, two_level_arch
+from repro.search import (STRATEGIES, MapspaceEncoding, SearchLog,
+                          crossover, make_strategy, mutate, prime_factors,
+                          run_search)
+
+WL = matmul(32, 32, 32, densities={"A": ("uniform", 0.3),
+                                   "B": ("uniform", 0.3)})
+DESIGN = coordinate_list_design(two_level_arch(buffer_kwords=8))
+CONS = MapspaceConstraints(budget=96, seed=0, spatial={1: {"n": 4}})
+
+
+def test_prime_factors():
+    assert prime_factors(1) == []
+    assert prime_factors(2) == [2]
+    assert prime_factors(12) == [3, 2, 2]
+    assert prime_factors(49) == [7, 7]
+    assert np.prod(prime_factors(3136)) == 3136
+
+
+# ----------------------------------------------------------------------
+# encoding: every genome decodes to a mapping the engine accepts
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("cons", [
+    CONS,
+    MapspaceConstraints(budget=96, seed=0),                 # no spatial
+    MapspaceConstraints(budget=96, seed=0, spatial={1: {"n": 4}},
+                        permutations={0: ("n", "k", "m"),
+                                      1: ("m", "n")}),      # pinned order
+])
+def test_random_genomes_decode_to_valid_nests(cons):
+    enc = MapspaceEncoding(WL, 2, cons)
+    pop = enc.random_population(jrandom.PRNGKey(0), 32)
+    assert pop.shape == (32, enc.genome_size)
+    for g in pop:
+        enc.nest_of(g).validate(WL)     # raises on any invalid mapping
+
+
+def test_repair_folds_any_genome_into_range():
+    enc = MapspaceEncoding(WL, 2, CONS)
+    rng = np.random.default_rng(0)
+    wild = rng.integers(-1000, 1000, size=(16, enc.genome_size))
+    fixed = enc.repair(wild)
+    assert (fixed >= 0).all() and (fixed < enc.cardinality).all()
+    for g in fixed:
+        enc.nest_of(g).validate(WL)
+
+
+def test_decode_population_partitions_and_groups_by_structure():
+    enc = MapspaceEncoding(WL, 2, CONS)
+    pop = enc.random_population(jrandom.PRNGKey(1), 48)
+    groups = enc.decode_population(pop)
+    seen = np.concatenate([idx for _, idx, _ in groups])
+    assert sorted(seen.tolist()) == list(range(48))
+    for template, idx, bounds in groups:
+        assert bounds.shape == (len(idx), template.num_slots)
+        for g, b in zip(pop[idx], bounds):
+            nest = enc.nest_of(g)
+            assert nest.structure() == tuple(
+                s for s, bb in zip(template.slots, b) if int(bb) > 1)
+
+
+def test_crossover_swaps_whole_factor_blocks():
+    enc = MapspaceEncoding(WL, 2, CONS)
+    pa = np.zeros((8, enc.genome_size), np.int64)
+    pb = enc.repair(np.ones((8, enc.genome_size), np.int64))
+    child = crossover(jrandom.PRNGKey(2), pa, pb, enc)
+    for row in child:
+        for blk in range(enc.num_blocks):
+            sel = enc.gene_block == blk
+            assert (row[sel] == pa[0][sel]).all() or \
+                   (row[sel] == pb[0][sel]).all()
+
+
+def test_mutation_always_changes_a_gene():
+    enc = MapspaceEncoding(WL, 2, CONS)
+    pop = enc.random_population(jrandom.PRNGKey(3), 16)
+    out = mutate(jrandom.PRNGKey(4), pop, enc, rate=0.0)
+    assert out.shape == pop.shape
+    # rate=0 still resamples exactly one forced gene per genome; with
+    # cardinality > 1 some draws will differ across 16 genomes
+    assert (out != pop).any()
+    assert ((out >= 0) & (out < enc.cardinality)).all()
+
+
+# ----------------------------------------------------------------------
+# reproducibility + trajectories
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", sorted(STRATEGIES))
+def test_same_key_same_searchlog(strategy):
+    r1 = run_search(DESIGN, WL, CONS, strategy=strategy, key=11)
+    r2 = run_search(DESIGN, WL, CONS, strategy=strategy, key=11)
+    assert r1.log.to_json() == r2.log.to_json()
+    assert r1.best_nest == r2.best_nest
+    assert (r1.evaluated, r1.valid) == (r2.evaluated, r2.valid)
+
+
+def test_trajectory_monotone_and_serializable():
+    res = run_search(DESIGN, WL, CONS, strategy="es", key=0)
+    traj = res.log.trajectory("best_edp")
+    assert len(traj) == len(res.log.records) >= 1
+    assert all(a >= b for a, b in zip(traj, traj[1:]))
+    roundtrip = SearchLog.from_json(res.log.to_json())
+    assert roundtrip.to_json() == res.log.to_json()
+    assert res.log.evaluations == res.evaluated
+
+
+def test_search_finds_valid_oracle_checked_mapping():
+    res = run_search(DESIGN, WL, CONS, strategy="hillclimb", key=0)
+    assert res.best is not None and res.best.result.valid
+    res.best_nest.validate(WL)
+    # the scalar oracle agrees with the fitness the search tracked
+    assert res.best.edp == pytest.approx(res.log.best_fitness, rel=1e-6)
+
+
+# ----------------------------------------------------------------------
+# mapper integration
+# ----------------------------------------------------------------------
+def test_mapper_search_strategy_dispatch():
+    res = search(DESIGN, WL, CONS, strategy="es", key=5)
+    assert isinstance(res, SearchResult)
+    assert res.log is not None and res.log.strategy == "es"
+    assert 0 < res.evaluated <= CONS.budget
+    # default path unchanged: no log, same signature
+    enum = search(DESIGN, WL, CONS)
+    assert enum.log is None
+
+
+def test_mapper_search_string_objective_enumeration_path():
+    """objective='cycles' (no strategy) must optimize cycles, not crash."""
+    res = search(DESIGN, WL, MapspaceConstraints(budget=24, seed=0),
+                 objective="cycles")
+    assert res.best is not None and res.best.result.valid
+    with pytest.raises(ValueError, match="objective"):
+        search(DESIGN, WL, CONS, objective="watts")
+
+
+def test_budget_caps_strategy_evaluations():
+    """cons.budget is a hard cap even when it is below pop_size."""
+    res = run_search(DESIGN, WL,
+                     MapspaceConstraints(budget=8, seed=0),
+                     strategy="es", key=0)   # default pop_size 32 > 8
+    assert 0 < res.evaluated <= 8
+
+
+def test_use_batched_false_forces_scalar_dispatch_with_strategy():
+    cons = MapspaceConstraints(budget=64, seed=0,
+                               permutations={0: ("n", "k", "m"),
+                                             1: ("m", "n")})
+    r_scalar = search(DESIGN, WL, cons, strategy="es", key=9,
+                      use_batched=False, pop_size=64)
+    r_auto = search(DESIGN, WL, cons, strategy="es", key=9, pop_size=64)
+    # same key => same candidates; scalar vs batched agree to round-off
+    assert r_scalar.best_nest == r_auto.best_nest
+    assert r_scalar.best.edp == pytest.approx(r_auto.best.edp, rel=1e-6)
+
+
+def test_mapper_search_strategy_rejects_callable_objective():
+    with pytest.raises(ValueError, match="metric name"):
+        search(DESIGN, WL, CONS, objective=lambda ev: ev.cycles,
+               strategy="es")
+    with pytest.raises(TypeError):
+        search(DESIGN, WL, CONS, key=3)      # strategy kwargs w/o strategy
+    with pytest.raises(ValueError, match="unknown strategy"):
+        search(DESIGN, WL, CONS, strategy="gradient-descent")
+
+
+def test_strategy_search_supports_scalar_only_density_models():
+    """Actual-data density models have no batched path; the runner falls
+    back to per-candidate scalar evaluation transparently."""
+    rng = np.random.default_rng(0)
+    wl = matmul(8, 8, 8, densities={
+        "A": ("actual", (rng.random((8, 8)) < 0.4).astype(float))})
+    res = run_search(DESIGN, wl,
+                     MapspaceConstraints(budget=32, seed=0),
+                     strategy="es", key=0, pop_size=16)
+    assert res.best is not None and res.best.result.valid
+    res.best_nest.validate(wl)
+
+
+# ----------------------------------------------------------------------
+# oracle validation of batched winners
+# ----------------------------------------------------------------------
+def test_validated_result_skips_oracle_rejected_candidates():
+    """If the batched ranking leaks a mapping the scalar oracle rejects,
+    the walk drops it and returns the next-best validated one."""
+    rejected = []
+
+    class StubModel:
+        def evaluate(self, workload, nest, check_capacity=True):
+            ok = nest != "bad"
+            if not ok:
+                rejected.append(nest)
+            return SimpleNamespace(result=SimpleNamespace(valid=ok),
+                                   edp=1.0, cycles=1.0, energy_pj=1.0)
+
+    nests = ["bad", "good", "better-but-invalid-flag"]
+    edp = np.asarray([1.0, 2.0, 3.0])
+    valid = np.asarray([True, True, False])
+    res = _validated_result(StubModel(), WL, lambda i: nests[i],
+                            edp=edp, valid=valid, n_eval=7)
+    assert res.best_nest == "good"
+    assert res.evaluated == 7
+    assert res.valid == 1            # "bad" dropped from the valid count
+    assert rejected == ["bad"]
+
+
+def test_validated_result_all_rejected_returns_empty():
+    class StubModel:
+        def evaluate(self, workload, nest, check_capacity=True):
+            return SimpleNamespace(result=SimpleNamespace(valid=False))
+
+    res = _validated_result(StubModel(), WL, lambda i: i,
+                            edp=np.asarray([1.0, 2.0]),
+                            valid=np.asarray([True, True]), n_eval=2)
+    assert res.best is None and res.best_nest is None and res.valid == 0
+
+
+# ----------------------------------------------------------------------
+# sharding: 1 device == N simulated shards
+# ----------------------------------------------------------------------
+def test_sharded_search_matches_single_device():
+    """Run the same fixed-key search in a subprocess with 2 simulated
+    host devices (population sharded via shard_map) and compare the
+    trajectory against the in-process single-device run."""
+    cons = MapspaceConstraints(budget=64, seed=0, spatial={1: {"n": 4}},
+                               permutations={0: ("n", "k", "m"),
+                                             1: ("m", "n")})
+    single = run_search(DESIGN, WL, cons, strategy="es", key=42,
+                        pop_size=64, mesh=None)
+    code = (
+        "import jax, json\n"
+        "assert len(jax.devices()) == 2, jax.devices()\n"
+        "import numpy as np\n"
+        "from repro.core import matmul\n"
+        "from repro.core.mapper import MapspaceConstraints\n"
+        "from repro.core.presets import coordinate_list_design, "
+        "two_level_arch\n"
+        "from repro.search import run_search\n"
+        "wl = matmul(32, 32, 32, densities={'A': ('uniform', 0.3), "
+        "'B': ('uniform', 0.3)})\n"
+        "design = coordinate_list_design(two_level_arch(buffer_kwords=8))\n"
+        "cons = MapspaceConstraints(budget=64, seed=0, "
+        "spatial={1: {'n': 4}}, permutations={0: ('n', 'k', 'm'), "
+        "1: ('m', 'n')})\n"
+        "res = run_search(design, wl, cons, strategy='es', key=42, "
+        "pop_size=64, mesh='auto')\n"
+        "print('LOG=' + res.log.to_json())\n")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                        + env.get("XLA_FLAGS", ""))
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = [ln for ln in proc.stdout.splitlines()
+               if ln.startswith("LOG=")][-1]
+    sharded = SearchLog.from_json(payload[len("LOG="):])
+    t1 = single.log.trajectory("best_edp")
+    t2 = sharded.trajectory("best_edp")
+    assert len(t1) == len(t2) > 0
+    np.testing.assert_allclose(t1, t2, rtol=1e-6)
