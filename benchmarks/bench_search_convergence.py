@@ -21,7 +21,7 @@ import subprocess
 import sys
 import time
 
-from repro.core import matmul
+from repro.core import compile_stats, matmul
 from repro.core.mapper import MapspaceConstraints, search
 from repro.core.presets import (coordinate_list_design, scnn_like,
                                 three_level_arch, two_level_arch)
@@ -38,11 +38,6 @@ CONV2X = ("conv2_x", 3136, 576, 64, 0.4, 0.55)
 STRATEGIES = ("random", "hillclimb", "annealing", "es")
 ES_BUDGET = 512
 POP = 32
-#: the conv2_x population scatters over many permutation templates per
-#: generation; per-template jit compiles would dwarf the search itself,
-#: so the quality-per-budget comparison runs on the scalar path (the
-#: batched + sharded path is exercised by the shard-parity check below)
-SCALAR_ONLY = 10 ** 9
 
 
 def _conv2x_setup():
@@ -146,23 +141,29 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
                 budget=ES_BUDGET * mult, seed=cons.seed,
                 spatial=cons.spatial)
             t0 = time.perf_counter()
-            res = search(design, wl, ecap)
+            with compile_stats.track() as st:
+                res = search(design, wl, ecap)
             dt = time.perf_counter() - t0
             enum_best[mult] = res.best.edp if res.best else float("inf")
             cphc = res.evaluated * computes / (dt * HOST_HZ)
             print(f"enumeration x{mult:2d}: budget={ecap.budget:5d} "
                   f"best EDP={enum_best[mult]:.4e}  ({dt:.1f}s, "
-                  f"CPHC={cphc:.0f})")
+                  f"CPHC={cphc:.0f}, {st.compiles} compiles)")
             rows.append((f"search_enum_x{mult}", dt * 1e6 / res.evaluated,
                          f"budget={ecap.budget};"
-                         f"best_edp={enum_best[mult]:.6e};cphc={cphc:.0f}"))
+                         f"best_edp={enum_best[mult]:.6e};cphc={cphc:.0f};"
+                         f"compiles={st.compiles}"))
 
-        # stochastic strategies at the 1x budget
+        # stochastic strategies at the 1x budget.  Free-permutation
+        # populations ride the bucketed engine: the whole mixed-
+        # permutation population is one compiled program per strategy
+        # run (compile counts reported below pin it)
         best = {}
         for strat in STRATEGIES:
             t0 = time.perf_counter()
-            res = run_search(design, wl, cons, strategy=strat, key=0,
-                             pop_size=POP, batch_threshold=SCALAR_ONLY)
+            with compile_stats.track() as st:
+                res = run_search(design, wl, cons, strategy=strat, key=0,
+                                 pop_size=POP)
             dt = time.perf_counter() - t0
             _assert_monotone(res.log)
             best[strat] = res.best.edp if res.best else float("inf")
@@ -170,10 +171,13 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
             cphc = res.evaluated * computes / (dt * HOST_HZ)
             print(f"{strat:>10s}: budget={res.evaluated:5d} "
                   f"best EDP={best[strat]:.4e}  ({dt:.1f}s, "
-                  f"CPHC={cphc:.0f})")
+                  f"CPHC={cphc:.0f}, {st.compiles} compiles, "
+                  f"{st.scalar_evals} scalar evals)")
             rows.append((f"search_{strat}", dt * 1e6 / res.evaluated,
                          f"budget={res.evaluated};"
-                         f"best_edp={best[strat]:.6e};cphc={cphc:.0f}"))
+                         f"best_edp={best[strat]:.6e};cphc={cphc:.0f};"
+                         f"compiles={st.compiles};"
+                         f"scalar_evals={st.scalar_evals}"))
 
         # acceptance: ES at budget B <= enumeration at 10B
         ratio = best["es"] / enum_best[10]

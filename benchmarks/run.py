@@ -6,43 +6,150 @@ per-PR).
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig1 stc   # substring filter
+
+Regression gate (CI)
+--------------------
+``python -m benchmarks.run --gate [fresh] [baseline]`` compares a fresh
+``BENCH_results.json`` against the committed baseline
+(``benchmarks/baseline.json``) WITHOUT re-running anything, and exits
+nonzero when any shared CPHC-family metric regressed by more than
+``GATE_TOLERANCE`` (25%) — so a perf regression fails the bench-smoke
+job outright instead of only tripping the job timeout.  Only rows (and
+keys) present in BOTH files are compared, so running a bench subset
+gates just that subset.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 import traceback
 
 RESULTS_JSON = "BENCH_results.json"
+BASELINE_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "baseline.json")
+#: relative drop in a CPHC-family metric that fails the gate
+GATE_TOLERANCE = 0.25
 
-from . import (bench_fig1_formats, bench_fig11_scnn, bench_fig12_eyerissv2,
-               bench_fig13_dstc, bench_fig15_16_stc_study,
-               bench_fig17_codesign, bench_kernels,
-               bench_search_convergence, bench_stc_exact,
-               bench_table5_cphc, bench_table7_compression, bench_vmapper)
-from .common import emit
 
-MODULES = [
-    ("fig1_formats", bench_fig1_formats),
-    ("table5_cphc", bench_table5_cphc),
-    ("fig11_scnn", bench_fig11_scnn),
-    ("fig12_eyerissv2", bench_fig12_eyerissv2),
-    ("fig13_dstc", bench_fig13_dstc),
-    ("table7_compression", bench_table7_compression),
-    ("stc_exact", bench_stc_exact),
-    ("fig15_16_stc_study", bench_fig15_16_stc_study),
-    ("fig17_codesign", bench_fig17_codesign),
-    ("vmapper", bench_vmapper),
-    ("search_convergence", bench_search_convergence),
-    ("kernels", bench_kernels),
-]
+def _parse_derived(derived: str) -> dict[str, float]:
+    """Numeric ``key=value`` pairs out of a derived string ("cphc=825;
+    speedup=87x" -> {"cphc": 825.0, "speedup": 87.0})."""
+    out: dict[str, float] = {}
+    for part in str(derived).split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k.strip()] = float(v.strip().rstrip("x"))
+        except ValueError:
+            continue
+    return out
+
+
+def check_regression(fresh_rows: list[dict], baseline_rows: list[dict],
+                     tolerance: float = GATE_TOLERANCE) -> list[str]:
+    """Failure messages for every CPHC-family metric shared between the
+    fresh rows and the baseline that dropped by more than ``tolerance``
+    relative — *after common-mode correction*.  CPHC is inverse
+    wall-clock, so a uniformly slower CI runner shifts every metric by
+    the same factor; each ratio is therefore normalized by the median
+    ratio across all compared metrics (capped at 1.0 so a uniformly
+    *faster* runner can't mask a real regression).  A single code path
+    regressing shows up as an outlier against the common mode and still
+    fails.  Raises via the caller when ZERO metrics are comparable —
+    a renamed bench row must not silently disable the gate."""
+    base = {r["name"]: _parse_derived(r.get("derived", ""))
+            for r in baseline_rows}
+    ratios: list[tuple[str, str, float, float, float]] = []
+    for row in fresh_rows:
+        ref = base.get(row["name"])
+        if ref is None:
+            continue
+        fresh = _parse_derived(row.get("derived", ""))
+        for key, ref_val in ref.items():
+            if not key.startswith("cphc") or key not in fresh:
+                continue
+            if ref_val <= 0:
+                continue
+            ratios.append((row["name"], key, fresh[key], ref_val,
+                           fresh[key] / ref_val))
+    if not ratios:
+        return ["no CPHC metrics shared between fresh results and the "
+                "baseline — the gate compared nothing (renamed bench "
+                "row? wrong bench subset?); refresh "
+                "benchmarks/baseline.json"]
+    ordered = sorted(r[-1] for r in ratios)
+    common_mode = min(1.0, ordered[len(ordered) // 2])
+    failures: list[str] = []
+    for name, key, fresh_val, ref_val, ratio in ratios:
+        corrected = ratio / common_mode
+        mark = "FAIL" if corrected < 1.0 - tolerance else "ok"
+        print(f"  [{mark}] {name}:{key}  baseline={ref_val:.0f}  "
+              f"fresh={fresh_val:.0f}  ({ratio:.2f}x raw, "
+              f"{corrected:.2f}x vs common mode)")
+        if corrected < 1.0 - tolerance:
+            failures.append(
+                f"{name}:{key} regressed to {corrected:.2f}x of baseline "
+                f"after common-mode correction ({fresh_val:.0f} vs "
+                f"{ref_val:.0f}, runner common mode {common_mode:.2f}x, "
+                f"tolerance {1.0 - tolerance:.2f}x)")
+    print(f"regression gate: {len(ratios)} CPHC metric(s) compared "
+          f"(common mode {common_mode:.2f}x), {len(failures)} "
+          f"regression(s)")
+    return failures
+
+
+def gate(argv: list[str]) -> None:
+    fresh_path = argv[0] if argv else RESULTS_JSON
+    baseline_path = argv[1] if len(argv) > 1 else BASELINE_JSON
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    print(f"comparing {fresh_path} against {baseline_path} "
+          f"(>{GATE_TOLERANCE:.0%} CPHC regression fails)")
+    failures = check_regression(fresh, baseline)
+    if failures:
+        raise SystemExit("bench regression gate FAILED:\n  "
+                         + "\n  ".join(failures))
+    print("bench regression gate passed")
 
 
 def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] == "--gate":
+        gate(sys.argv[2:])
+        return
+
+    from . import (bench_bucketed_sweep, bench_fig1_formats,
+                   bench_fig11_scnn, bench_fig12_eyerissv2,
+                   bench_fig13_dstc, bench_fig15_16_stc_study,
+                   bench_fig17_codesign, bench_kernels,
+                   bench_search_convergence, bench_stc_exact,
+                   bench_table5_cphc, bench_table7_compression,
+                   bench_vmapper)
+    from .common import emit
+
+    modules = [
+        ("fig1_formats", bench_fig1_formats),
+        ("table5_cphc", bench_table5_cphc),
+        ("fig11_scnn", bench_fig11_scnn),
+        ("fig12_eyerissv2", bench_fig12_eyerissv2),
+        ("fig13_dstc", bench_fig13_dstc),
+        ("table7_compression", bench_table7_compression),
+        ("stc_exact", bench_stc_exact),
+        ("fig15_16_stc_study", bench_fig15_16_stc_study),
+        ("fig17_codesign", bench_fig17_codesign),
+        ("vmapper", bench_vmapper),
+        ("search_convergence", bench_search_convergence),
+        ("bucketed_sweep", bench_bucketed_sweep),
+        ("kernels", bench_kernels),
+    ]
+
     filters = [a for a in sys.argv[1:] if not a.startswith("-")]
     rows: list[tuple[str, float, str]] = []
     failed = []
-    for name, mod in MODULES:
+    for name, mod in modules:
         if filters and not any(f in name for f in filters):
             continue
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")

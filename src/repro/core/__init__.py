@@ -25,7 +25,8 @@ from .workload import TensorSpec, Workload, conv2d, dot, matmul, mv
 
 #: lazily exported (PEP 562): core.batched imports jax at module scope,
 #: and scalar-only users shouldn't pay that import cost up front
-_LAZY = {"BatchedModel", "BatchedUnsupported", "NestTemplate"}
+_LAZY = {"BatchedModel", "BatchedUnsupported", "NestTemplate",
+         "TemplateBucket", "BucketedModel", "BucketingPolicy"}
 
 
 def __getattr__(name: str):
@@ -38,6 +39,7 @@ def __getattr__(name: str):
 __all__ = [
     "Architecture", "ComputeLevel", "StorageLevel",
     "BatchedModel", "BatchedUnsupported", "NestTemplate",
+    "TemplateBucket", "BucketedModel", "BucketingPolicy",
     "ActualDataModel", "BandedModel", "DenseModel", "DensityModel",
     "StructuredModel", "UniformModel", "make_density_model",
     "Design", "Evaluation", "Sparseloop",

@@ -26,8 +26,29 @@ boundaries are therefore recomputed per candidate from ``bound > 1``
 masks, keeping batched results bit-comparable with the scalar engine's
 dropped-unit-loop semantics).
 
+Bucketed lowering (one compile per *family* of templates)
+---------------------------------------------------------
+Compiling one program per exact template makes free-permutation searches
+and multi-layer sweeps pay one multi-second XLA compile per loop order —
+hundreds of compiles for a population that evaluates in milliseconds.  A
+:class:`TemplateBucket` is the padded superset of a template family: per
+storage level it carries the *maximum* slot count over the family, absent
+loops ride as unit bounds (inert by the contract above), and — the key
+move — the slot->rank assignment is a traced per-candidate gather instead
+of a compile-time constant.  Internally the traced program receives a
+per-slot rank one-hot matrix: :class:`BatchedModel` passes a constant
+(so exact templates behave exactly as before), :class:`BucketedModel`
+derives it from a per-candidate ``rank_ids`` array, so every permutation
+of every layer of a network evaluates through the *same* compiled
+program.  ``bucket_for`` / ``group_by_bucket`` implement the bucketing
+policy (pad each level's temporal slot count up to the workload's rank
+count, keep the spatial slot shape), bounding the number of compiled
+programs for a sweep by the number of distinct (workload, bucket shape)
+pairs instead of the number of loop orders.
+
 ``BatchedModel.evaluate`` matches scalar ``Sparseloop.evaluate`` to
-float64 round-off (tests/test_batched.py pins <=1e-6 relative); the
+float64 round-off (tests/test_batched.py pins <=1e-6 relative, and
+tests/test_bucketed.py pins the padded-bucket path against both); the
 scalar engine remains the per-candidate reference oracle.
 
 Density models must provide traceable statistics (``DensityModel.batched``
@@ -36,10 +57,16 @@ Density models must provide traceable statistics (``DensityModel.batched``
 :class:`BatchedUnsupported`; callers fall back to the scalar path.
 
 When a candidate axis is large and several devices are visible,
-``BatchedModel.evaluate(bounds, mesh=...)`` shards the population across
-the mesh with ``shard_map`` (the version shim in
-``runtime/compression.py``): each device vmaps its slice of the
-population, so mapspace sweeps scale linearly with device count.
+``evaluate(..., mesh=...)`` shards the population across the mesh with
+``shard_map`` (the version shim in ``runtime/compression.py``): each
+device vmaps its slice of the population, so mapspace sweeps scale
+linearly with device count.
+
+Every traced-program construction and every first-evaluation-at-a-shape
+(the moments XLA actually compiles) is counted by
+:mod:`repro.core.compile_stats`, so sweeps can assert their compile
+budget ("this sweep compiled N programs") — the CI compile-gate rides on
+it.
 """
 from __future__ import annotations
 
@@ -51,6 +78,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from . import compile_stats
 from .arch import Architecture
 from .density import (BatchedDensityUnsupported, DensityModel,
                       make_density_model)
@@ -108,6 +136,175 @@ def template_of(nest: LoopNest) -> NestTemplate:
 
 
 # ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TemplateBucket:
+    """Padded superset of a family of :class:`NestTemplate`s.
+
+    The bucket fixes only the *shape* of the nest: how many temporal and
+    spatial slots each storage level has (``temporal_slots[lvl]`` /
+    ``spatial_slots[lvl]``, innermost-first indices) over a rank
+    vocabulary ``ranks``.  Which rank each slot iterates is per-candidate
+    data (``rank_ids``), and absent loops are unit bounds — so one
+    compiled :class:`BucketedModel` evaluates every template the bucket
+    :meth:`fits`, across permutations and layers alike.
+    """
+
+    ranks: tuple[str, ...]
+    temporal_slots: tuple[int, ...]
+    spatial_slots: tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.temporal_slots) != len(self.spatial_slots):
+            raise ValueError("temporal/spatial slot counts disagree on "
+                             "the number of levels")
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.temporal_slots)
+
+    @property
+    def num_slots(self) -> int:
+        return sum(self.temporal_slots) + sum(self.spatial_slots)
+
+    def slot_layout(self) -> tuple[tuple[int, bool], ...]:
+        """(level, spatial) per slot, outermost level first — each
+        level's temporal slots followed by its spatial slots (slot order
+        within a level is the loop order; spatial position within the
+        level is immaterial to the model)."""
+        layout: list[tuple[int, bool]] = []
+        for lvl in range(self.num_levels - 1, -1, -1):
+            layout += [(lvl, False)] * self.temporal_slots[lvl]
+            layout += [(lvl, True)] * self.spatial_slots[lvl]
+        return tuple(layout)
+
+    def _offsets(self) -> dict[int, tuple[int, int]]:
+        """level -> (first temporal slot, first spatial slot) indices."""
+        out: dict[int, tuple[int, int]] = {}
+        j = 0
+        for lvl in range(self.num_levels - 1, -1, -1):
+            out[lvl] = (j, j + self.temporal_slots[lvl])
+            j += self.temporal_slots[lvl] + self.spatial_slots[lvl]
+        return out
+
+    def fits(self, template: NestTemplate) -> bool:
+        """True when every level of ``template`` has no more slots than
+        the bucket provides and every rank is in the vocabulary."""
+        if template.num_levels != self.num_levels:
+            return False
+        t = [0] * self.num_levels
+        s = [0] * self.num_levels
+        for r, lvl, sp in template.slots:
+            if r not in self.ranks:
+                return False
+            (s if sp else t)[lvl] += 1
+        return all(t[lvl] <= self.temporal_slots[lvl]
+                   and s[lvl] <= self.spatial_slots[lvl]
+                   for lvl in range(self.num_levels))
+
+    def lower(self, template: NestTemplate) -> np.ndarray:
+        """Bucket slot index of each template slot (order within each
+        level preserved; unused bucket slots are left for unit-bound
+        padding)."""
+        if not self.fits(template):
+            raise ValueError(f"template {template} does not fit bucket "
+                             f"{self}")
+        offs = self._offsets()
+        used_t = [0] * self.num_levels
+        used_s = [0] * self.num_levels
+        out = np.empty(template.num_slots, np.int64)
+        for i, (_, lvl, sp) in enumerate(template.slots):
+            if sp:
+                out[i] = offs[lvl][1] + used_s[lvl]
+                used_s[lvl] += 1
+            else:
+                out[i] = offs[lvl][0] + used_t[lvl]
+                used_t[lvl] += 1
+        return out
+
+    def lower_population(self, template: NestTemplate, bounds
+                         ) -> tuple[np.ndarray, np.ndarray]:
+        """Embed a (C, template.num_slots) bound matrix into the bucket:
+        returns ``(padded_bounds, rank_ids)``, both (C, num_slots).
+        Padding slots carry bound 1 (inert by the lowering contract) and
+        rank id 0 (immaterial at bound 1)."""
+        bounds = np.atleast_2d(np.asarray(bounds, np.int64))
+        slot_map = self.lower(template)
+        ridx = {r: i for i, r in enumerate(self.ranks)}
+        padded = np.ones((len(bounds), self.num_slots), np.int64)
+        padded[:, slot_map] = bounds
+        ids = np.zeros(self.num_slots, np.int64)
+        ids[slot_map] = [ridx[r] for r, _, _ in template.slots]
+        return padded, np.broadcast_to(ids, padded.shape).copy()
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketingPolicy:
+    """How templates map to buckets.
+
+    ``pad_temporal_to_ranks`` (the default) pads every level's temporal
+    slot count up to the workload's rank count — the shape the genome
+    encoding emits — so all free-permutation templates of one workload
+    land in ONE bucket and the compile count of a sweep is bounded by the
+    number of distinct (workload, spatial shape, num_levels) triples
+    rather than the number of loop orders."""
+
+    pad_temporal_to_ranks: bool = True
+
+
+DEFAULT_BUCKETING = BucketingPolicy()
+
+
+def bucket_for(template: NestTemplate, ranks,
+               policy: BucketingPolicy = DEFAULT_BUCKETING
+               ) -> TemplateBucket:
+    """The bucket a template lowers into under ``policy``."""
+    ranks = tuple(ranks)
+    t = [0] * template.num_levels
+    s = [0] * template.num_levels
+    for r, lvl, sp in template.slots:
+        if r not in ranks:
+            raise ValueError(f"template rank {r!r} not in {ranks}")
+        (s if sp else t)[lvl] += 1
+    if policy.pad_temporal_to_ranks:
+        t = [max(c, len(ranks)) for c in t]
+    return TemplateBucket(ranks=ranks, temporal_slots=tuple(t),
+                          spatial_slots=tuple(s))
+
+
+def group_by_bucket(nests, ranks,
+                    policy: BucketingPolicy = DEFAULT_BUCKETING
+                    ) -> dict[TemplateBucket, list[int]]:
+    """Stable grouping of candidate nests by bucket (the padded analogue
+    of :func:`group_by_template`)."""
+    groups: dict[TemplateBucket, list[int]] = {}
+    for i, nest in enumerate(nests):
+        b = bucket_for(template_of(nest), ranks, policy)
+        groups.setdefault(b, []).append(i)
+    return groups
+
+
+def lower_nests(bucket: TemplateBucket, nests, idxs
+                ) -> tuple[np.ndarray, np.ndarray, list[int]]:
+    """Lower the nests at ``idxs`` into ``bucket``: returns
+    ``(bounds, rank_ids, order)`` where the two (len(idxs), num_slots)
+    arrays are row-aligned with ``order`` (the input indices, regrouped
+    by exact template so each template's rows embed in one vectorized
+    ``lower_population`` call).  The shared front half of every bucketed
+    dispatch (``Sparseloop.evaluate_batch``, ``mapper._search_batched``)."""
+    per_template: dict[NestTemplate, list[int]] = {}
+    for i in idxs:
+        per_template.setdefault(template_of(nests[i]), []).append(i)
+    all_bounds, all_ids, order = [], [], []
+    for template, t_idxs in per_template.items():
+        rows = np.stack([template.bounds_of(nests[i]) for i in t_idxs])
+        pb, pi = bucket.lower_population(template, rows)
+        all_bounds.append(pb)
+        all_ids.append(pi)
+        order.extend(t_idxs)
+    return np.concatenate(all_bounds), np.concatenate(all_ids), order
+
+
+# ----------------------------------------------------------------------
 def _prod(xs):
     out = 1.0
     for x in xs:
@@ -138,30 +335,46 @@ class _Breakdown:
     skipped: object = 0.0
 
 
-class BatchedModel:
-    """Compiled batched evaluator for one (design, workload, template).
+class _TracedNestModel:
+    """Shared traced three-step program over a static slot *shape*.
 
-    ``evaluate(bounds)`` takes an (C, num_slots) integer array of per-slot
-    loop bounds and returns per-candidate metric arrays.  The jitted
-    program is cached on the instance; reuse the instance across calls
-    (``Sparseloop.evaluate_batch`` and ``mapper.search`` do).
+    The per-candidate inputs are the slot bounds ``b`` and a per-slot
+    rank one-hot matrix ``oh`` (num_slots x num_ranks) — which rank each
+    slot iterates.  :class:`BatchedModel` closes over a constant ``oh``
+    (exact template), :class:`BucketedModel` traces it from per-candidate
+    rank ids (padded bucket).  Everything rank-keyed in the scalar model
+    (tile bounds, relevance, leader windows) becomes a length-R vector
+    masked by ``oh``; unit-bound slots are inert regardless of their rank
+    id, which is what makes bucket padding free.
     """
 
-    def __init__(self, design, workload: Workload, template: NestTemplate,
+    kind = "program"
+
+    def __init__(self, design, workload: Workload,
+                 slot_levels: tuple[int, ...],
+                 slot_spatial: tuple[bool, ...], num_levels: int,
                  check_capacity: bool = True):
         arch: Architecture = design.arch
-        if template.num_levels != arch.num_levels:
+        if num_levels != arch.num_levels:
             raise ValueError(
-                f"template has {template.num_levels} levels, architecture "
+                f"nest shape has {num_levels} levels, architecture "
                 f"{arch.name} has {arch.num_levels}")
         self.design = design
         self.arch = arch
         self.safs: SAFSpec = design.safs
         self.workload = workload
-        self.template = template
+        self.slot_levels = tuple(slot_levels)
+        self.slot_spatial = tuple(slot_spatial)
+        self.num_slots = len(slot_levels)
         self.check_capacity = check_capacity
         self.level_names = [arch.level(s).name
                             for s in range(arch.num_levels)]
+        self.ranks: tuple[str, ...] = tuple(workload.rank_bounds)
+        self._ridx = {r: i for i, r in enumerate(self.ranks)}
+        self._rel = {
+            t.name: np.asarray([r in t.ranks for r in self.ranks])
+            for t in workload.tensors
+        }
         self.models: dict[str, DensityModel] = {
             t.name: make_density_model(workload.density_spec(t.name),
                                        t.size(workload.rank_bounds))
@@ -172,39 +385,16 @@ class BatchedModel:
                 raise BatchedUnsupported(
                     f"density model for tensor {name!r} "
                     f"({type(m).__name__}) has no traceable closed form")
-        self._fn = jax.jit(jax.vmap(self._single))
         self._sharded_fns: dict = {}
+        self._compiled: set = set()
+        compile_stats.record_program(self.kind)
 
     # ------------------------------------------------------------------
-    def evaluate(self, bounds, mesh=None) -> dict[str, np.ndarray]:
-        """bounds: (C, num_slots) -> dict of (C,) arrays.
-
-        With a ``jax.sharding.Mesh`` of > 1 devices, the candidate axis is
-        sharded across the mesh's (single) axis with ``shard_map`` — each
-        device vmaps its population slice; the population is padded (by
-        repeating the last candidate) to a multiple of the device count
-        and the padding is stripped from the returned arrays.
-        """
-        bounds = np.asarray(bounds)
-        if bounds.ndim != 2 or bounds.shape[1] != self.template.num_slots:
-            raise ValueError(
-                f"bounds must be (C, {self.template.num_slots}), "
-                f"got {bounds.shape}")
-        with enable_x64():
-            if mesh is not None and mesh.size > 1:
-                return self._evaluate_sharded(bounds, mesh)
-            out = self._fn(jnp.asarray(bounds, jnp.float64))
-            return {k: np.asarray(v) for k, v in out.items()}
-
-    def _evaluate_sharded(self, bounds: np.ndarray, mesh
-                          ) -> dict[str, np.ndarray]:
-        C, n = len(bounds), mesh.size
-        pad = (-C) % n
-        if pad:
-            bounds = np.concatenate(
-                [bounds, np.repeat(bounds[-1:], pad, axis=0)])
-        out = self._sharded_fn(mesh)(jnp.asarray(bounds, jnp.float64))
-        return {k: np.asarray(v)[:C] for k, v in out.items()}
+    def _note_compile(self, shape_key) -> None:
+        """First evaluation at a shape is when jit actually compiles."""
+        if shape_key not in self._compiled:
+            self._compiled.add(shape_key)
+            compile_stats.record_compile(self.kind)
 
     def _sharded_fn(self, mesh):
         key = (tuple(d.id for d in mesh.devices.flat), mesh.axis_names)
@@ -213,62 +403,91 @@ class BatchedModel:
             from jax.sharding import PartitionSpec as P
 
             from ..runtime.compression import shard_map
+            # one positional arg per model (BucketedModel packs bounds +
+            # rank_ids into a tuple); the spec is a pytree prefix, so it
+            # shards every leaf's leading (candidate) axis
             spec = P(mesh.axis_names[0])
-            fn = jax.jit(shard_map(jax.vmap(self._single), mesh=mesh,
-                                   in_specs=(spec,), out_specs=spec,
-                                   check_vma=False))
+            fn = jax.jit(shard_map(jax.vmap(self._vmapped),
+                                   mesh=mesh, in_specs=(spec,),
+                                   out_specs=spec, check_vma=False))
             self._sharded_fns[key] = fn
         return fn
+
+    @staticmethod
+    def _pad_to_multiple(arrs, n: int):
+        """Pad the candidate axis of each array to a multiple of n by
+        repeating the last row; returns (padded_arrays, original_C)."""
+        C = len(arrs[0])
+        pad = (-C) % n
+        if pad:
+            arrs = [np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
+                    for a in arrs]
+        return arrs, C
 
     # ------------------------------------------------------------------
     # The traced per-candidate program.  Mirrors analyze_dataflow /
     # analyze_sparse / evaluate_microarch line by line; any change to the
-    # scalar model must be reflected here (the parity suite pins it).
+    # scalar model must be reflected here (the parity suites pin it).
     # ------------------------------------------------------------------
-    def _single(self, b):
+    def _single(self, b, oh):
         wl = self.workload
-        slots = self.template.slots
-        S = self.template.num_levels
+        levels = self.slot_levels
+        S = self.arch.num_levels
+        R = len(self.ranks)
         arch = self.arch
         models = self.models
+        rel_of = self._rel
         expanded = self.safs.expand_double_sided()
         zname = wl.output
         zspec = wl.output_tensor
 
-        temporal = [j for j, (_, _, sp) in enumerate(slots) if not sp]
-        spatial = [j for j, (_, _, sp) in enumerate(slots) if sp]
+        temporal = [j for j in range(self.num_slots)
+                    if not self.slot_spatial[j]]
+        spatial = [j for j in range(self.num_slots) if self.slot_spatial[j]]
 
         def spatial_at(level):
-            return [j for j in spatial if slots[j][1] == level]
+            return [j for j in spatial if levels[j] == level]
 
         def instances_of(level):
-            return _prod(b[j] for j in spatial if slots[j][1] > level)
+            return _prod(b[j] for j in spatial if levels[j] > level)
+
+        def rank_is(j, rel_vec):
+            """Is slot j's rank relevant to ``rel_vec``? (traced bool)"""
+            return jnp.any(oh[j] & rel_vec)
+
+        def masked_prod(js):
+            """Per-rank bound product over a static slot subset: the
+            vectorized form of the rank-keyed tile-bound dicts."""
+            if not js:
+                return jnp.ones(R)
+            sel = np.asarray(js)
+            return jnp.prod(jnp.where(oh[sel], b[sel][:, None], 1.0),
+                            axis=0)
 
         # ---------------- step 1: dataflow (dense traffic) ----------------
-        def fetch_counts(child_level, rel):
+        def fetch_counts(child_level, rel_vec):
             """(rounds, distinct) tile-fetch counts into child_level; the
             reuse prefix ends at the innermost relevant *non-unit* loop."""
-            js = [j for j in temporal if slots[j][1] > child_level]
-            rels = [slots[j][0] in rel for j in js]
-            if not js or not any(rels):
+            js = [j for j in temporal if levels[j] > child_level]
+            if not js:
                 return 1.0, 1.0
-            bs = jnp.stack([b[j] for j in js])
-            rel_arr = jnp.asarray(rels)
+            sel = np.asarray(js)
+            bs = b[sel]
+            rel_arr = jnp.any(oh[sel] & rel_vec, axis=1)
             in_prefix = _suffix_any(rel_arr & (bs > 1))
             rounds = jnp.prod(jnp.where(in_prefix, bs, 1.0))
             distinct = jnp.prod(jnp.where(in_prefix & rel_arr, bs, 1.0))
             return rounds, distinct
 
-        def tile_bounds(level):
-            tb: dict[str, object] = {}
-            for j, (r, lvl, _) in enumerate(slots):
-                if lvl <= level:
-                    tb[r] = tb.get(r, 1.0) * b[j]
-            return tb
+        # per-level resident-tile bounds as (R,) vectors — independent of
+        # the tensor, so hoisted out of the per-tensor loop
+        tbv = [masked_prod([j for j in range(self.num_slots)
+                            if levels[j] <= s]) for s in range(S)]
+        ones_r = jnp.ones(R)
 
         def tile_dims(t: TensorSpec, tb):
             return tuple(
-                sum(tb.get(r, 1.0) for r in dim) - (len(dim) - 1)
+                sum(tb[self._ridx[r]] for r in dim) - (len(dim) - 1)
                 for dim in t.projection)
 
         def tile_size(t: TensorSpec, tb):
@@ -280,10 +499,10 @@ class BatchedModel:
 
         dense: dict[tuple[str, int], dict] = {}
         for t in wl.tensors:
-            rel = t.ranks
+            rel = rel_of[t.name]
             is_out = t.name == zname
             for s in range(S):
-                tb = tile_bounds(s)
+                tb = tbv[s]
                 tdims = tile_dims(t, tb)
                 tsize = _prod(tdims)
                 tl = dict(tile_dims=tdims, tile_size=tsize,
@@ -301,21 +520,21 @@ class BatchedModel:
                         tl["partial_fill_words"] = (rounds - distinct) * tsize
 
                 child = s - 1
-                child_tb = tile_bounds(child) if child >= 0 else {}
+                child_tb = tbv[child] if child >= 0 else ones_r
                 c_rounds, c_distinct = fetch_counts(child, rel)
-                served_tb = dict(child_tb)
+                served_tb = child_tb
                 for j in spatial_at(s):
-                    r = slots[j][0]
-                    if r in rel:
-                        served_tb[r] = served_tb.get(r, 1.0) * b[j]
+                    served_tb = served_tb * jnp.where(oh[j] & rel, b[j],
+                                                      1.0)
                 served_words = tile_size(t, served_tb)
                 tl["read_rounds"] = c_rounds
                 if not is_out:
                     tl["read_words"] = c_rounds * served_words
                 else:
                     child_tile = tile_size(t, child_tb)
-                    spatial_rel = _prod(b[j] for j in spatial_at(s)
-                                        if slots[j][0] in rel)
+                    spatial_rel = _prod(
+                        jnp.where(rank_is(j, rel), b[j], 1.0)
+                        for j in spatial_at(s))
                     tl["read_words"] = ((c_rounds - c_distinct) * child_tile
                                         * spatial_rel if s > 0 else 0.0)
 
@@ -326,7 +545,7 @@ class BatchedModel:
                                               * jnp.maximum(1.0, fanout))
                     else:
                         ce, _cd = fetch_counts(s - 1, rel)
-                        child_tile = tile_size(t, tile_bounds(s - 1))
+                        child_tile = tile_size(t, tbv[s - 1])
                         tl["update_words"] = fanout * ce * child_tile
                     if s < S - 1:
                         tl["rmw_read_words"] = jnp.maximum(
@@ -341,28 +560,25 @@ class BatchedModel:
                 dense[(t.name, s)] = tl
 
         # ---------------- step 2: sparse filtering ----------------
-        def leader_window_bounds(level, follower_ranks):
+        def leader_window_bounds(level, follower_rel):
             """Per-rank leader-intersection window (dataflow.
             leader_tile_bounds), with unit loops treated as absent."""
-            bounds: dict[str, object] = {}
-            for j, (r, lvl, _) in enumerate(slots):
-                if lvl < level:
-                    bounds[r] = bounds.get(r, 1.0) * b[j]
-            outer = [j for j in temporal if slots[j][1] >= level]
+            bounds = masked_prod([j for j in range(self.num_slots)
+                                  if levels[j] < level])
+            outer = [j for j in temporal if levels[j] >= level]
             if outer:
-                rels = jnp.asarray(
-                    [slots[j][0] in follower_ranks for j in outer])
-                bs = jnp.stack([b[j] for j in outer])
+                sel = np.asarray(outer)
+                bs = b[sel]
+                rels = jnp.any(oh[sel] & follower_rel, axis=1)
                 include = ~_suffix_any(rels & (bs > 1))
-                for i, j in enumerate(outer):
-                    r = slots[j][0]
-                    bounds[r] = bounds.get(r, 1.0) * jnp.where(
-                        include[i], b[j], 1.0)
+                bounds = bounds * jnp.prod(
+                    jnp.where(oh[sel] & include[:, None], bs[:, None],
+                              1.0), axis=0)
             return bounds
 
         def leader_prob(follower: TensorSpec, level_idx, lname: str):
             leader = wl.tensor(lname)
-            bounds = leader_window_bounds(level_idx, follower.ranks)
+            bounds = leader_window_bounds(level_idx, rel_of[follower.name])
             tile = jnp.maximum(1.0, tile_size(leader, bounds))
             return models[lname].prob_empty_b(tile)
 
@@ -406,7 +622,7 @@ class BatchedModel:
                     continue
                 for lname in saf.leaders:
                     leader = wl.tensor(lname)
-                    bounds = leader_window_bounds(s + 1, zspec.ranks)
+                    bounds = leader_window_bounds(s + 1, rel_of[zname])
                     tile = jnp.maximum(1.0, tile_size(leader, bounds))
                     p = models[lname].prob_empty_b(tile)
                     dst = r_skip if saf.kind == SAFKind.SKIP else r_gate
@@ -589,7 +805,7 @@ class BatchedModel:
             rounds = dense[(saf.follower, lvl)]["read_rounds"]
             for lname in saf.leaders:
                 leader = wl.tensor(lname)
-                bounds = leader_window_bounds(lvl, follower.ranks)
+                bounds = leader_window_bounds(lvl, rel_of[follower.name])
                 ldims = tile_dims(leader, bounds)
                 lfmt = self.safs.format_for(self.level_names[lvl], lname)
                 ls = fmt_stats(lfmt, ldims, models[lname])
@@ -649,10 +865,140 @@ class BatchedModel:
         }
 
 
+class BatchedModel(_TracedNestModel):
+    """Compiled batched evaluator for one (design, workload, template).
+
+    ``evaluate(bounds)`` takes an (C, num_slots) integer array of per-slot
+    loop bounds and returns per-candidate metric arrays.  The jitted
+    program is cached on the instance; reuse the instance across calls
+    (``Sparseloop.evaluate_batch`` and ``mapper.search`` do).
+    """
+
+    kind = "template"
+
+    def __init__(self, design, workload: Workload, template: NestTemplate,
+                 check_capacity: bool = True):
+        super().__init__(
+            design, workload,
+            slot_levels=tuple(lvl for _, lvl, _ in template.slots),
+            slot_spatial=tuple(sp for _, _, sp in template.slots),
+            num_levels=template.num_levels,
+            check_capacity=check_capacity)
+        self.template = template
+        for r, _, _ in template.slots:
+            if r not in self._ridx:
+                raise ValueError(f"template rank {r!r} not in workload "
+                                 f"ranks {self.ranks}")
+        self._onehot = np.asarray(
+            [[rr == r for rr in self.ranks] for r, _, _ in template.slots],
+            dtype=bool).reshape(self.num_slots, len(self.ranks))
+        self._fn = jax.jit(jax.vmap(self._vmapped))
+
+    def _vmapped(self, b):
+        return self._single(b, self._onehot)
+
+    # ------------------------------------------------------------------
+    def evaluate(self, bounds, mesh=None) -> dict[str, np.ndarray]:
+        """bounds: (C, num_slots) -> dict of (C,) arrays.
+
+        With a ``jax.sharding.Mesh`` of > 1 devices, the candidate axis is
+        sharded across the mesh's (single) axis with ``shard_map`` — each
+        device vmaps its population slice; the population is padded (by
+        repeating the last candidate) to a multiple of the device count
+        and the padding is stripped from the returned arrays.
+        """
+        bounds = np.asarray(bounds)
+        if bounds.ndim != 2 or bounds.shape[1] != self.num_slots:
+            raise ValueError(
+                f"bounds must be (C, {self.num_slots}), "
+                f"got {bounds.shape}")
+        compile_stats.record_batched_evals(len(bounds))
+        with enable_x64():
+            if mesh is not None and mesh.size > 1:
+                (bounds,), C = self._pad_to_multiple([bounds], mesh.size)
+                self._note_compile(("sharded", mesh.size, bounds.shape))
+                out = self._sharded_fn(mesh)(
+                    jnp.asarray(bounds, jnp.float64))
+                return {k: np.asarray(v)[:C] for k, v in out.items()}
+            self._note_compile(bounds.shape)
+            out = self._fn(jnp.asarray(bounds, jnp.float64))
+            return {k: np.asarray(v) for k, v in out.items()}
+
+
+class BucketedModel(_TracedNestModel):
+    """Compiled batched evaluator for one (design, workload, bucket).
+
+    Like :class:`BatchedModel`, but the slot->rank assignment is traced
+    per-candidate data: ``evaluate(bounds, rank_ids)`` takes matching
+    (C, num_slots) arrays of loop bounds and rank indices (into
+    ``bucket.ranks``), so candidates with *different loop orders* — or
+    entire different templates the bucket fits — evaluate through this
+    one compiled program.  Unit-bound slots are inert whatever their rank
+    id, which is what makes the padding free.
+    """
+
+    kind = "bucket"
+
+    def __init__(self, design, workload: Workload, bucket: TemplateBucket,
+                 check_capacity: bool = True):
+        layout = bucket.slot_layout()
+        super().__init__(
+            design, workload,
+            slot_levels=tuple(lvl for lvl, _ in layout),
+            slot_spatial=tuple(sp for _, sp in layout),
+            num_levels=bucket.num_levels,
+            check_capacity=check_capacity)
+        if tuple(bucket.ranks) != self.ranks:
+            raise ValueError(
+                f"bucket ranks {bucket.ranks} != workload ranks "
+                f"{self.ranks}")
+        self.bucket = bucket
+        self._fn = jax.jit(jax.vmap(self._vmapped))
+
+    def _vmapped(self, args):
+        b, ids = args
+        oh = ids[:, None] == jnp.arange(len(self.ranks))
+        return self._single(b, oh)
+
+    # ------------------------------------------------------------------
+    def evaluate(self, bounds, rank_ids, mesh=None) -> dict[str, np.ndarray]:
+        """(bounds, rank_ids): matching (C, num_slots) arrays -> dict of
+        (C,) metric arrays.  ``mesh`` shards the candidate axis exactly
+        as in :meth:`BatchedModel.evaluate`."""
+        bounds = np.asarray(bounds)
+        rank_ids = np.asarray(rank_ids)
+        if bounds.ndim != 2 or bounds.shape[1] != self.num_slots:
+            raise ValueError(
+                f"bounds must be (C, {self.num_slots}), "
+                f"got {bounds.shape}")
+        if rank_ids.shape != bounds.shape:
+            raise ValueError(
+                f"rank_ids shape {rank_ids.shape} != bounds shape "
+                f"{bounds.shape}")
+        if rank_ids.min(initial=0) < 0 or \
+                rank_ids.max(initial=0) >= len(self.ranks):
+            raise ValueError(f"rank_ids out of range [0, "
+                             f"{len(self.ranks)})")
+        compile_stats.record_batched_evals(len(bounds))
+        with enable_x64():
+            if mesh is not None and mesh.size > 1:
+                (bounds, rank_ids), C = self._pad_to_multiple(
+                    [bounds, rank_ids], mesh.size)
+                self._note_compile(("sharded", mesh.size, bounds.shape))
+                out = self._sharded_fn(mesh)(
+                    (jnp.asarray(bounds, jnp.float64),
+                     jnp.asarray(rank_ids, jnp.int64)))
+                return {k: np.asarray(v)[:C] for k, v in out.items()}
+            self._note_compile(bounds.shape)
+            out = self._fn((jnp.asarray(bounds, jnp.float64),
+                            jnp.asarray(rank_ids, jnp.int64)))
+            return {k: np.asarray(v) for k, v in out.items()}
+
+
 # ----------------------------------------------------------------------
 # Content-keyed model cache: jit compiles are expensive (seconds); callers
 # across Sparseloop instances / benchmark reps must hit the same compiled
-# program for the same (design, workload, template).
+# program for the same (design, workload, template-or-bucket).
 # ----------------------------------------------------------------------
 _MODEL_CACHE: dict = {}
 _MODEL_CACHE_CAP = 128
@@ -668,26 +1014,40 @@ def _freeze(x):
     return x
 
 
-def _cache_key(design, workload: Workload, template: NestTemplate,
+def _cache_key(design, workload: Workload, shape_key,
                check_capacity: bool):
     return (design.arch, _freeze(design.safs.formats), design.safs.actions,
             workload.name, tuple(workload.rank_bounds.items()),
             workload.tensors, workload.output, _freeze(workload.densities),
-            template, check_capacity)
+            shape_key, check_capacity)
+
+
+def _get_model(cls, design, workload: Workload, shape, check_capacity):
+    key = _cache_key(design, workload, shape, check_capacity)
+    model = _MODEL_CACHE.get(key)
+    if model is None:
+        model = cls(design, workload, shape,
+                    check_capacity=check_capacity)
+        if len(_MODEL_CACHE) >= _MODEL_CACHE_CAP:
+            _MODEL_CACHE.pop(next(iter(_MODEL_CACHE)))
+        _MODEL_CACHE[key] = model
+    else:
+        compile_stats.record_cache_hit()
+    return model
 
 
 def get_batched_model(design, workload: Workload, template: NestTemplate,
                       check_capacity: bool = True) -> BatchedModel:
     """Memoized :class:`BatchedModel` constructor."""
-    key = _cache_key(design, workload, template, check_capacity)
-    model = _MODEL_CACHE.get(key)
-    if model is None:
-        model = BatchedModel(design, workload, template,
-                             check_capacity=check_capacity)
-        if len(_MODEL_CACHE) >= _MODEL_CACHE_CAP:
-            _MODEL_CACHE.pop(next(iter(_MODEL_CACHE)))
-        _MODEL_CACHE[key] = model
-    return model
+    return _get_model(BatchedModel, design, workload, template,
+                      check_capacity)
+
+
+def get_bucketed_model(design, workload: Workload, bucket: TemplateBucket,
+                       check_capacity: bool = True) -> BucketedModel:
+    """Memoized :class:`BucketedModel` constructor."""
+    return _get_model(BucketedModel, design, workload, bucket,
+                      check_capacity)
 
 
 def group_by_template(nests) -> dict[NestTemplate, list[int]]:

@@ -1,0 +1,128 @@
+"""Compile-count accounting for the batched JAX engine.
+
+The analytical model is only fast when re-evaluation is cheap, and in the
+JAX port the dominant re-evaluation cost is XLA compilation: every new
+traced program (a ``BatchedModel``/``BucketedModel``) plus every new
+population shape triggers a compile measured in seconds, while an
+evaluation of a thousand candidates takes milliseconds.  Sweeps therefore
+have a *compile budget* — "this sweep compiled N programs" is a first-class
+correctness property that tests, benchmarks, and CI assert (the
+``compile-gate`` CI step fails when a free-permutation search compiles
+more programs than its bucket bound allows).
+
+The counters are deliberately independent of XLA internals: a *compile*
+is recorded the first time a given evaluator instance sees a given input
+shape (jit caches by shape, so this is exactly when XLA compiles), and a
+*program* is recorded when a new traced evaluator is constructed.  Scalar
+fallback evaluations are counted too, so "zero scalar-path evaluations"
+is assertable.
+
+Usage::
+
+    from repro.core import compile_stats
+    with compile_stats.track() as stats:
+        run_search(...)
+    assert stats.compiles <= bound and stats.scalar_evals == 0
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+
+@dataclasses.dataclass
+class CompileStats:
+    """Counters over one tracking window (or the process lifetime)."""
+
+    #: traced evaluator programs constructed (BatchedModel/BucketedModel)
+    programs: int = 0
+    #: XLA compilations: first evaluation of a (program, shape) pair
+    compiles: int = 0
+    #: content-cache hits in get_batched_model / get_bucketed_model
+    cache_hits: int = 0
+    #: candidates evaluated through a compiled (vmap+jit) program
+    batched_evals: int = 0
+    #: candidates evaluated through the scalar fallback path
+    scalar_evals: int = 0
+    #: per-kind compile breakdown, e.g. {"template": 3, "bucket": 1}
+    compiles_by_kind: dict = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["compiles_by_kind"] = dict(self.compiles_by_kind)
+        return d
+
+    def __sub__(self, other: "CompileStats") -> "CompileStats":
+        by_kind = {
+            k: v - other.compiles_by_kind.get(k, 0)
+            for k, v in self.compiles_by_kind.items()
+            if v - other.compiles_by_kind.get(k, 0)
+        }
+        return CompileStats(
+            programs=self.programs - other.programs,
+            compiles=self.compiles - other.compiles,
+            cache_hits=self.cache_hits - other.cache_hits,
+            batched_evals=self.batched_evals - other.batched_evals,
+            scalar_evals=self.scalar_evals - other.scalar_evals,
+            compiles_by_kind=by_kind)
+
+    def copy(self) -> "CompileStats":
+        return CompileStats(**{**dataclasses.asdict(self),
+                               "compiles_by_kind":
+                               dict(self.compiles_by_kind)})
+
+
+#: process-lifetime counters (never reset implicitly; see ``reset``)
+STATS = CompileStats()
+
+
+def record_program(kind: str) -> None:
+    STATS.programs += 1
+    del kind
+
+
+def record_compile(kind: str) -> None:
+    STATS.compiles += 1
+    STATS.compiles_by_kind[kind] = STATS.compiles_by_kind.get(kind, 0) + 1
+
+
+def record_cache_hit() -> None:
+    STATS.cache_hits += 1
+
+
+def record_batched_evals(n: int) -> None:
+    STATS.batched_evals += int(n)
+
+
+def record_scalar_evals(n: int) -> None:
+    STATS.scalar_evals += int(n)
+
+
+def snapshot() -> CompileStats:
+    """Point-in-time copy of the process-lifetime counters."""
+    return STATS.copy()
+
+
+def reset() -> None:
+    """Zero the process-lifetime counters.  Note the batched-model content
+    caches are NOT cleared: a model compiled before the reset stays warm
+    and re-use of it records no new compile — which is exactly the
+    "compiles caused by this sweep" semantics the CI gates want."""
+    global STATS
+    fresh = CompileStats()
+    STATS.__dict__.update(fresh.__dict__)
+
+
+@contextlib.contextmanager
+def track():
+    """Context manager yielding a :class:`CompileStats` that, on exit,
+    holds the *delta* accumulated inside the block (counters inside the
+    block are live — read them after exit for final values)."""
+    before = snapshot()
+    delta = CompileStats()
+    try:
+        yield delta
+    finally:
+        after = snapshot() - before
+        delta.__dict__.update(after.__dict__)
+        delta.compiles_by_kind = dict(after.compiles_by_kind)

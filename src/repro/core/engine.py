@@ -107,33 +107,60 @@ class Sparseloop:
         return get_batched_model(self.design, workload, template,
                                  check_capacity=check_capacity)
 
+    def bucketed_model(self, workload: Workload, bucket,
+                       check_capacity: bool = True):
+        """Compiled bucketed evaluator for one padded template family
+        (content-cached — repeated calls reuse the jitted program)."""
+        from .batched import get_bucketed_model
+        return get_bucketed_model(self.design, workload, bucket,
+                                  check_capacity=check_capacity)
+
     def evaluate_batch(self, workload: Workload,
                        nests: Sequence[LoopNest] | Iterable[LoopNest],
-                       check_capacity: bool = True) -> dict[str, np.ndarray]:
+                       check_capacity: bool = True,
+                       bucketed: bool = True) -> dict[str, np.ndarray]:
         """Evaluate a population of mappings in one (or a few) jitted JAX
         computations.
 
-        Candidates are grouped by loop-structure template; each group is
-        lowered to a dense (C, num_slots) bound array and evaluated with
-        the vectorized three-step model.  Returns per-candidate arrays
-        aligned with the input order: cycles, energy_pj, edp, valid,
+        Candidates are grouped by *bucket* (padded template family,
+        ``core.batched.TemplateBucket``): each bucket's candidates —
+        whatever their loop order — are lowered onto one compiled
+        program, with per-candidate rank ids carrying the permutation as
+        data.  A mixed-permutation population therefore costs a handful
+        of compiles (one per bucket) instead of one per loop structure;
+        pass ``bucketed=False`` for the legacy one-compile-per-exact-
+        template grouping.  Returns per-candidate arrays aligned with the
+        input order: cycles, energy_pj, edp, valid,
         compute_actual/gated/skipped.  Raises ``BatchedUnsupported`` when
         the workload's density models have no traceable closed form — use
         the scalar ``evaluate`` loop then.
         """
-        from .batched import group_by_template
+        from .batched import group_by_bucket, group_by_template, lower_nests
         nests = list(nests)
         out: dict[str, np.ndarray] = {}
-        for template, idxs in group_by_template(nests).items():
-            model = self.batched_model(workload, template, check_capacity)
-            bounds = np.stack([template.bounds_of(nests[i]) for i in idxs])
-            res = model.evaluate(bounds)
+
+        def scatter(idxs, res):
             for k, v in res.items():
                 if k not in out:
                     out[k] = np.zeros(
                         len(nests),
                         dtype=bool if k == "valid" else np.float64)
                 out[k][idxs] = v
+
+        if not bucketed:
+            for template, idxs in group_by_template(nests).items():
+                model = self.batched_model(workload, template,
+                                           check_capacity)
+                bounds = np.stack([template.bounds_of(nests[i])
+                                   for i in idxs])
+                scatter(idxs, model.evaluate(bounds))
+            return out
+
+        ranks = tuple(workload.rank_bounds)
+        for bucket, idxs in group_by_bucket(nests, ranks).items():
+            model = self.bucketed_model(workload, bucket, check_capacity)
+            bounds, ids, order = lower_nests(bucket, nests, idxs)
+            scatter(order, model.evaluate(bounds, ids))
         return out
 
     # ------------------------------------------------------------------

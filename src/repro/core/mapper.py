@@ -5,10 +5,12 @@ workload; this module enumerates/samples the mapspace (loop-bound
 factorizations x permutations) under user constraints and evaluates
 candidates with the analytical engine.
 
-Candidates sharing a loop structure are dispatched as one group to the
-batched JAX engine (core.batched) — one jitted computation per template —
-while the scalar ``Sparseloop.evaluate`` remains the per-candidate
-reference oracle (the winning mapping is always re-evaluated through it).
+Candidates are dispatched to the batched JAX engine (core.batched) in
+*bucket* groups — padded template families that carry the loop order as
+per-candidate data, so mixed-permutation slices cost one jitted
+computation per bucket instead of one per loop structure — while the
+scalar ``Sparseloop.evaluate`` remains the per-candidate reference
+oracle (the winning mapping is always re-evaluated through it).
 ``use_batched="auto"`` batches only groups large enough to amortize the
 jit compile; custom objectives or coordinate-dependent density models
 fall back to the scalar loop automatically.
@@ -287,6 +289,7 @@ def _search_lowered(model: Sparseloop, workload: Workload,
     the scalar oracle.  Returns None when the budget is below
     ``min_candidates`` (not worth a jit compile — caller falls back to
     the scalar loop)."""
+    from .batched import bucket_for
     ranks = list(workload.rank_bounds)
     spatial = cons.spatial or {}
     combos = _split_combos(workload, template.num_levels, cons)
@@ -303,7 +306,12 @@ def _search_lowered(model: Sparseloop, workload: Workload,
             bounds[:, j] = spatial.get(lvl, {}).get(r, 1)
         else:
             bounds[:, j] = arr[:, ranks.index(r), lvl]
-    res = model.batched_model(workload, template).evaluate(bounds)
+    # lower through the template's bucket: a permutation-constrained
+    # search then shares its compiled program with every other loop order
+    # of the same workload (free-permutation searches included)
+    bucket = bucket_for(template, tuple(ranks))
+    padded, ids = bucket.lower_population(template, bounds)
+    res = model.bucketed_model(workload, bucket).evaluate(padded, ids)
     return _validated_result(model, workload,
                              lambda i: template.nest_with(bounds[i]),
                              edp=res["edp"], valid=res["valid"],
@@ -312,26 +320,30 @@ def _search_lowered(model: Sparseloop, workload: Workload,
 
 def _search_batched(model: Sparseloop, workload: Workload,
                     nests: list[LoopNest], min_group: int) -> SearchResult:
-    """Grouped dispatch: per-template batched EDP ranking, scalar oracle
-    for small groups and for the final winner."""
-    from .batched import group_by_template
+    """Grouped dispatch: per-bucket batched EDP ranking (mixed loop
+    orders share one compiled program), scalar oracle for small groups
+    and for the final winner."""
+    from . import compile_stats
+    from .batched import group_by_bucket, lower_nests
     C = len(nests)
     edp = np.full(C, np.inf)
     valid = np.zeros(C, dtype=bool)
     n_eval = 0
     scalar_idxs: list[int] = []
+    ranks = tuple(workload.rank_bounds)
 
-    for template, idxs in group_by_template(nests).items():
+    for bucket, idxs in group_by_bucket(nests, ranks).items():
         if len(idxs) < max(1, min_group):
             scalar_idxs.extend(idxs)
             continue
-        bm = model.batched_model(workload, template)
-        bounds = np.stack([template.bounds_of(nests[i]) for i in idxs])
-        res = bm.evaluate(bounds)
-        edp[idxs] = res["edp"]
-        valid[idxs] = res["valid"]
+        bm = model.bucketed_model(workload, bucket)
+        bounds, ids, order = lower_nests(bucket, nests, idxs)
+        res = bm.evaluate(bounds, ids)
+        edp[order] = res["edp"]
+        valid[order] = res["valid"]
         n_eval += len(idxs)
 
+    compile_stats.record_scalar_evals(len(scalar_idxs))
     for i in scalar_idxs:
         try:
             ev = model.evaluate(workload, nests[i])

@@ -17,7 +17,8 @@ Entry points: :func:`run_search` here, or
 """
 from .encoding import MapspaceEncoding, prime_factors
 from .log import GenerationRecord, SearchLog
-from .runner import PopulationEvaluator, population_mesh, run_search
+from .runner import (PopulationEvaluator, SearchConfig, population_mesh,
+                     run_search)
 from .strategies import (STRATEGIES, EvolutionStrategy, HillClimb,
                          RandomSearch, SimulatedAnnealing, Strategy,
                          crossover, make_strategy, mutate)
@@ -25,7 +26,8 @@ from .strategies import (STRATEGIES, EvolutionStrategy, HillClimb,
 __all__ = [
     "MapspaceEncoding", "prime_factors",
     "GenerationRecord", "SearchLog",
-    "PopulationEvaluator", "population_mesh", "run_search",
+    "PopulationEvaluator", "SearchConfig", "population_mesh",
+    "run_search",
     "STRATEGIES", "EvolutionStrategy", "HillClimb", "RandomSearch",
     "SimulatedAnnealing", "Strategy", "crossover", "make_strategy",
     "mutate",

@@ -19,11 +19,16 @@ Spatial loops are taken verbatim from the constraints (they describe the
 hardware fanout, not a search dimension), exactly as the enumerating
 mapper does.
 
-Decoding produces ``(NestTemplate, bounds-row)`` pairs: genomes sharing
-permutation genes share a template, so a whole population lowers onto a
-handful of jitted batched-engine programs (`core.batched`).  Levels are
-slotted with *all* ranks (unit bounds = absent loops), mirroring
-``mapper._full_template``.
+Decoding has two forms.  ``decode_population`` produces
+``(NestTemplate, bounds-row)`` pairs: genomes sharing permutation genes
+share a template.  ``decode_bucketed`` — the fast path — emits
+*bucket-relative* candidates instead: every genome of the encoding lives
+in ONE :class:`core.batched.TemplateBucket` (each level slotted with all
+ranks; unit bounds = absent loops, mirroring ``mapper._full_template``),
+and the permutation genes decode to per-candidate ``rank_ids`` *data*
+rather than per-template structure — so a whole free-permutation
+population evaluates through a single compiled ``BucketedModel``
+program instead of one compile per loop order.
 """
 from __future__ import annotations
 
@@ -32,7 +37,7 @@ import math
 
 import numpy as np
 
-from ..core.batched import NestTemplate
+from ..core.batched import NestTemplate, TemplateBucket
 from ..core.mapper import (MapspaceConstraints, constrained_order,
                            spatial_residual)
 from ..core.mapping import LoopNest
@@ -205,6 +210,75 @@ class MapspaceEncoding:
             template = self.template_of(g[idx[0]])
             out.append((template, idx, self.bounds_of(g[idx], template)))
         return out
+
+    # ------------------------------------------------------------------
+    @property
+    def bucket(self) -> TemplateBucket:
+        """The single padded bucket every genome of this encoding lowers
+        into: each level carries all ranks as temporal slots (absent
+        loops ride as unit bounds) plus the constraint-fixed spatial
+        slots.  The whole mapspace slice — every permutation — evaluates
+        through one compiled ``BucketedModel`` program."""
+        spatial = self.cons.spatial or {}
+        n_spatial = tuple(
+            sum(1 for b in spatial.get(lvl, {}).values() if b > 1)
+            for lvl in range(self.num_levels))
+        return TemplateBucket(
+            ranks=tuple(self.ranks),
+            temporal_slots=(len(self.ranks),) * self.num_levels,
+            spatial_slots=n_spatial)
+
+    def decode_bucketed(self, genomes: np.ndarray
+                        ) -> tuple[TemplateBucket, np.ndarray, np.ndarray]:
+        """Bucket-relative decode of a (n, G) population: returns
+        ``(bucket, bounds, rank_ids)`` with ``bounds`` and ``rank_ids``
+        both (n, bucket.num_slots) — permutation indices become data
+        (the rank-id gather), not structure, so the population needs no
+        per-template grouping at all."""
+        g = self.repair(genomes)
+        n = len(g)
+        R, L = len(self.ranks), self.num_levels
+        ridx = {r: i for i, r in enumerate(self.ranks)}
+
+        # per-(candidate, rank, level) temporal bound from the factor genes
+        fb = np.ones((n, R, L), np.int64)
+        for ri, r in enumerate(self.ranks):
+            blk = self._rank_block[r]
+            if blk.stop == blk.start:
+                continue
+            primes = np.asarray(self._gene_prime[blk], np.int64)
+            for lvl in range(L):
+                fb[:, ri, lvl] = np.prod(
+                    np.where(g[:, blk] == lvl, primes, 1), axis=1)
+
+        # per-(candidate, level) rank order (indices into self.ranks)
+        order = np.empty((n, L, R), np.int64)
+        perm_table = np.asarray(self.perms, np.int64).reshape(-1, R)
+        for lvl in range(L):
+            if lvl in self.fixed_order:
+                order[:, lvl, :] = np.asarray(
+                    [ridx[r] for r in self.fixed_order[lvl]], np.int64)
+            else:
+                gp = g[:, self.num_factor_genes
+                       + self.perm_levels.index(lvl)]
+                order[:, lvl, :] = perm_table[gp]
+
+        bucket = self.bucket
+        bounds = np.ones((n, bucket.num_slots), np.int64)
+        ids = np.zeros((n, bucket.num_slots), np.int64)
+        spatial = self.cons.spatial or {}
+        j = 0
+        for lvl in range(L - 1, -1, -1):
+            ids[:, j: j + R] = order[:, lvl, :]
+            bounds[:, j: j + R] = np.take_along_axis(
+                fb[:, :, lvl], order[:, lvl, :], axis=1)
+            j += R
+            for r, b in spatial.get(lvl, {}).items():
+                if b > 1:
+                    ids[:, j] = ridx[r]
+                    bounds[:, j] = b
+                    j += 1
+        return bucket, bounds, ids
 
     def nest_of(self, genome: np.ndarray) -> LoopNest:
         """Materialize the concrete LoopNest (unit loops dropped)."""

@@ -1,17 +1,30 @@
 """Search runner: drives an ask/tell strategy over the batched engine.
 
 Each generation the strategy proposes a genome population; the runner
-decodes it into (template, bounds) groups and evaluates every group as
-one jitted batched computation (`core.batched.BatchedModel`).  When more
-than one device is visible the population axis is sharded across them
-with ``shard_map`` (``mesh="auto"``); a single device falls back to the
-plain ``vmap`` path — both produce identical metric arrays, so the
-search trajectory is device-count independent (the convergence bench
-pins single-device vs multi-shard to <= 1e-6 relative).
+decodes it *bucket-relative* (`encoding.decode_bucketed`) and evaluates
+the whole population — mixed permutations included — as ONE jitted
+bucketed computation (`core.batched.BucketedModel`): the loop order
+rides as per-candidate rank-id data, so a free-permutation population
+costs one compile total instead of one per loop order (the pre-bucketing
+code scattered such populations over hundreds of templates and fell back
+to the scalar path).  When more than one device is visible the
+population axis is sharded across them with ``shard_map``
+(``mesh="auto"``); a single device falls back to the plain ``vmap`` path
+— both produce identical metric arrays, so the search trajectory is
+device-count independent (the convergence bench pins single-device vs
+multi-shard to <= 1e-6 relative).
 
-Workloads whose density models have no traceable closed form
-(actual-data) transparently fall back to per-candidate scalar
-evaluation — same search, slower fitness.
+Dispatch is controlled by :class:`SearchConfig`: ``bucketed`` toggles
+the bucket route, and ``batch_threshold`` — overridable via the
+``REPRO_SEARCH_BATCH_THRESHOLD`` environment variable so CI smoke can
+force either path deterministically — is the smallest group handed to a
+compiled program (groups below it run scalar; dispatch depends only on
+group sizes, never on jit-cache state, so a run stays bit-reproducible
+from its key).  Workloads whose density models have no traceable closed
+form (actual-data) transparently fall back to per-candidate scalar
+evaluation — same search, slower fitness.  Scalar-path candidates are
+counted in ``repro.core.compile_stats`` so tests and the CI compile-gate
+can assert "this search ran fully batched".
 
 The returned :class:`mapper.SearchResult` carries the winning mapping
 *validated through the scalar oracle*: the runner keeps a small archive
@@ -21,8 +34,12 @@ batched/scalar drift can never leak a mapping the oracle rejects.
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+
 import numpy as np
 
+from ..core import compile_stats
 from ..core.batched import batched_supported
 from ..core.engine import Sparseloop
 from ..core.mapper import MapspaceConstraints, SearchResult, _validated_result
@@ -48,37 +65,91 @@ def population_mesh(min_devices: int = 2):
     return Mesh(np.asarray(devices), ("pop",))
 
 
-#: smallest per-template group handed to the batched engine: a jit
-#: compile costs seconds while a scalar evaluation costs ~a millisecond,
-#: so tiny groups (populations scattered across many permutation
-#: templates) run scalar.  Dispatch depends only on group sizes — never
-#: on jit-cache state — so a run stays bit-reproducible from its key.
+#: default for ``SearchConfig.batch_threshold``: the smallest group
+#: handed to a compiled program.  A jit compile costs seconds while a
+#: scalar evaluation costs ~a millisecond, so tiny groups run scalar.
+#: With bucketed dispatch the whole population is one group, so the
+#: threshold only matters for the legacy per-template route and for
+#: pathologically small populations.
 BATCH_THRESHOLD = 32
 
 
+def _env_int(name: str, default: int) -> int:
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    try:
+        return int(raw)
+    except ValueError as e:
+        raise ValueError(f"{name} must be an integer, got {raw!r}") from e
+
+
+def _env_bool(name: str, default: bool) -> bool:
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    return raw.strip().lower() not in ("0", "false", "no", "off", "")
+
+
+@dataclasses.dataclass
+class SearchConfig:
+    """Dispatch knobs for population evaluation.
+
+    Defaults read the environment once at construction, so CI can force
+    either path without touching call sites:
+
+    * ``REPRO_SEARCH_BATCH_THRESHOLD`` — smallest group worth a compile
+      (huge value => everything scalar; 0/1 => everything batched).
+    * ``REPRO_SEARCH_BUCKETED`` — "0"/"false" disables the bucketed
+      route (population falls back to per-template grouping).
+    """
+
+    batch_threshold: int = dataclasses.field(
+        default_factory=lambda: _env_int("REPRO_SEARCH_BATCH_THRESHOLD",
+                                         BATCH_THRESHOLD))
+    bucketed: bool = dataclasses.field(
+        default_factory=lambda: _env_bool("REPRO_SEARCH_BUCKETED", True))
+
+
 class PopulationEvaluator:
-    """Fitness function over genome populations: decode -> group by
-    template -> batched (optionally sharded) evaluation, with a scalar
-    path for groups too small to amortize a compile and for workloads
-    with no traceable density model (actual-data)."""
+    """Fitness function over genome populations.
+
+    Default route: bucket-relative decode -> ONE batched (optionally
+    sharded) evaluation for the entire population, permutations as data.
+    Fallbacks: per-template grouping (``config.bucketed=False``) and the
+    per-candidate scalar path for groups below ``config.batch_threshold``
+    or for workloads with no traceable density model (actual-data).
+    """
 
     def __init__(self, design, workload: Workload, enc: MapspaceEncoding,
                  mesh=None, check_capacity: bool = True,
-                 batch_threshold: int = BATCH_THRESHOLD):
+                 config: SearchConfig | None = None):
         self.model = Sparseloop(design)
         self.workload = workload
         self.enc = enc
         self.mesh = mesh
         self.check_capacity = check_capacity
-        self.batch_threshold = batch_threshold
+        self.config = config or SearchConfig()
         self.batched = batched_supported(design, workload)
 
     def __call__(self, genomes: np.ndarray) -> dict[str, np.ndarray]:
         n = len(genomes)
         out = {k: np.full(n, np.inf) for k in METRICS}
         out["valid"] = np.zeros(n, dtype=bool)
+        threshold = max(1, self.config.batch_threshold)
+
+        if (self.batched and self.config.bucketed and n >= threshold):
+            bucket, bounds, ids = self.enc.decode_bucketed(genomes)
+            bm = self.model.bucketed_model(
+                self.workload, bucket, check_capacity=self.check_capacity)
+            res = bm.evaluate(bounds, ids, mesh=self.mesh)
+            for k in METRICS:
+                out[k][:] = res[k]
+            out["valid"][:] = res["valid"]
+            return out
+
         for template, idx, bounds in self.enc.decode_population(genomes):
-            if self.batched and len(idx) >= max(1, self.batch_threshold):
+            if self.batched and len(idx) >= threshold:
                 bm = self.model.batched_model(
                     self.workload, template,
                     check_capacity=self.check_capacity)
@@ -87,6 +158,7 @@ class PopulationEvaluator:
                     out[k][idx] = res[k]
                 out["valid"][idx] = res["valid"]
             else:           # small group or scalar-only density model
+                compile_stats.record_scalar_evals(len(idx))
                 for i, b in zip(idx, bounds):
                     try:
                         ev = self.model.evaluate(
@@ -109,7 +181,8 @@ def run_search(design, workload: Workload,
                metric: str = "edp",
                mesh="auto",
                check_capacity: bool = True,
-               batch_threshold: int = BATCH_THRESHOLD,
+               config: SearchConfig | None = None,
+               batch_threshold: int | None = None,
                log_to: SearchLog | None = None,
                **strategy_options) -> SearchResult:
     """Stochastic mapspace search.  Returns a ``SearchResult`` whose
@@ -121,7 +194,9 @@ def run_search(design, workload: Workload,
     comparable at equal evaluation budget.  ``mesh="auto"`` shards the
     population axis across all visible devices (>= 2); pass ``None`` to
     force the single-device vmap path or a ``jax.sharding.Mesh`` to
-    control placement.
+    control placement.  ``config`` (a :class:`SearchConfig`) controls
+    dispatch; ``batch_threshold`` is a convenience override of its field
+    of the same name.
     """
     import jax.random as jrandom
 
@@ -132,9 +207,13 @@ def run_search(design, workload: Workload,
     enc = MapspaceEncoding(workload, design.arch.num_levels, cons)
     if mesh == "auto":
         mesh = population_mesh()
+    config = config or SearchConfig()
+    if batch_threshold is not None:
+        config = dataclasses.replace(config,
+                                     batch_threshold=batch_threshold)
     evaluate = PopulationEvaluator(design, workload, enc, mesh=mesh,
                                    check_capacity=check_capacity,
-                                   batch_threshold=batch_threshold)
+                                   config=config)
 
     seed = key if isinstance(key, (int, np.integer)) else None
     if seed is not None:
