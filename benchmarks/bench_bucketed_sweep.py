@@ -1,31 +1,38 @@
-"""Bucketed padded-template lowering: one compile per (layer, bucket)
-across permutations and network layers.
+"""Bucketed padded-template lowering + workload-as-data: one compile per
+(arch, bucket shape) across permutations AND network layers.
 
 The sweep evaluates mixed-permutation candidate populations for ALL conv
 layers of the Table 5 network (ResNet50 as im2col GEMMs, the paper's
 CPHC workload) on the SCNN-like 3-level design, twice:
 
   * **per-template** (the pre-bucketing dispatch): candidates grouped by
-    exact loop structure, one ``BatchedModel`` compile per structure per
-    layer — permutation diversity multiplies the compile bill;
-  * **bucketed**: the whole layer population lowers onto one padded
-    ``TemplateBucket`` program, loop order carried as per-candidate
-    rank-id data — one compile per layer, period.
+    exact loop structure, one ``BatchedModel`` compile per structure —
+    permutation diversity multiplies the compile bill (layers no longer
+    do: workload parameters are traced, so equal structures share);
+  * **bucketed**: every layer's population lowers onto ONE padded
+    ``TemplateBucket`` program — loop order rides as per-candidate
+    rank-id data, rank bounds + density parameters as traced
+    ``WorkloadParams`` — one compile for the whole network, period.
 
 Both paths are timed end-to-end (compiles included — compile cost is the
 point) and their compile counts come from ``repro.core.compile_stats``.
 The acceptance bar asserted in full mode: bucketed is >= 3x faster on
-the multi-layer sweep and its compile count equals the bucket bound (one
-per layer); the two paths agree to <= 1e-6 relative on every candidate.
+the multi-layer sweep and its compile count equals the *bucket* count
+(ONE — independent of the layer count), with every layer after the
+first evaluating program-shared; the two paths agree to <= 1e-6
+relative on every candidate.
 
   python -m benchmarks.bench_bucketed_sweep                 # full
   python -m benchmarks.bench_bucketed_sweep --smoke         # CI smoke
   python -m benchmarks.bench_bucketed_sweep --compile-gate  # CI gate
+  python -m benchmarks.bench_bucketed_sweep --shared-smoke  # CI smoke
 
-``--compile-gate`` runs the free-permutation ES smoke and fails if the
-search compiled more programs than its bucket bound allows or touched
-the scalar path at all — the CI regression gate for the bucketed
-lowering.
+``--compile-gate`` runs free-permutation ES over ALL FOUR Table 5
+layers and fails if the whole multi-layer search compiled more programs
+than the layer-independent bucket bound (one) or touched the scalar
+path at all — the CI regression gate for the bucketed + workload-as-data
+lowering.  ``--shared-smoke`` checks mixed-density (uniform + actual)
+layers share one program with scalar-oracle parity.
 """
 from __future__ import annotations
 
@@ -80,17 +87,17 @@ def _sweep(layers, n_per_layer: int, perm_diversity: int):
     (wall_bucketed, wall_per_template, stats_bucketed, stats_per_template,
     worst_parity_rel, n_candidates, n_templates)."""
     prepared = []
-    n_templates = 0
+    templates = set()
     for layer in layers:
         design, wl, cons = _setup(layer)
         enc = MapspaceEncoding(wl, design.arch.num_levels, cons)
         pop = _population(enc, key=0, n=n_per_layer,
                           perm_diversity=perm_diversity)
         groups = enc.decode_population(pop)
-        n_templates += len(groups)
+        templates.update(t for t, _, _ in groups)
         prepared.append((Sparseloop(design), wl, enc, pop, groups))
 
-    # ---- bucketed: one compiled program per layer ----
+    # ---- bucketed: one compiled program for the whole network ----
     edp_b = []
     with compile_stats.track() as st_bucket:
         t0 = time.perf_counter()
@@ -100,7 +107,8 @@ def _sweep(layers, n_per_layer: int, perm_diversity: int):
             edp_b.append(bm.evaluate(bounds, ids)["edp"])
         wall_b = time.perf_counter() - t0
 
-    # ---- per-template: one compile per loop structure per layer ----
+    # ---- per-template: one compile per loop structure (structures are
+    # shared across layers now that workload params are traced) ----
     edp_t = []
     with compile_stats.track() as st_templ:
         t0 = time.perf_counter()
@@ -117,39 +125,93 @@ def _sweep(layers, n_per_layer: int, perm_diversity: int):
         float(np.max(np.abs(a - b) / np.maximum(1e-30, np.abs(b))))
         for a, b in zip(edp_b, edp_t))
     return (wall_b, wall_t, st_bucket, st_templ, worst,
-            len(layers) * n_per_layer, n_templates)
+            len(layers) * n_per_layer, len(templates))
 
 
 def compile_gate() -> list[tuple[str, float, str]]:
-    """Free-permutation ES smoke with a hard compile budget: the whole
-    population must ride the bucketed engine (zero scalar-path
-    evaluations) and compile at most ``bucket bound`` programs — one,
-    since a single (workload, spatial shape) sweep is one bucket."""
-    design, wl, cons = _setup(RESNET50_LAYERS[0])
-    cons.budget = 96
+    """Free-permutation ES over ALL Table 5 layers with a hard,
+    layer-independent compile budget: every layer's population must ride
+    the bucketed engine (zero scalar-path evaluations) and the whole
+    4-layer sweep must compile at most ``bucket bound`` programs — ONE,
+    since the layers share a (workload structure, spatial shape) bucket
+    and their rank bounds + densities are traced ``WorkloadParams``
+    (compiles <= bucket count, NOT layers x buckets)."""
+    layers = RESNET50_LAYERS
     bucket_bound = 1
+    results = []
     with compile_stats.track() as st:
-        res = run_search(design, wl, cons, strategy="es", key=0,
-                         pop_size=32, mesh=None)
-    assert res.best is not None and res.best.result.valid
-    traj = res.log.trajectory("best_edp")
-    assert all(a >= b for a, b in zip(traj, traj[1:])), \
-        f"best-so-far trajectory not monotone: {traj}"
+        for layer in layers:
+            design, wl, cons = _setup(layer)
+            cons.budget = 96
+            res = run_search(design, wl, cons, strategy="es", key=0,
+                             pop_size=32, mesh=None)
+            assert res.best is not None and res.best.result.valid
+            traj = res.log.trajectory("best_edp")
+            assert all(a >= b for a, b in zip(traj, traj[1:])), \
+                f"best-so-far trajectory not monotone on {wl.name}: {traj}"
+            results.append(res)
     compiles = st.compiles
-    print(f"compile gate: free-permutation ES on {wl.name}, "
-          f"{res.evaluated} evals -> {compiles} compile(s) "
-          f"(bound {bucket_bound}), {st.scalar_evals} scalar-path evals")
+    n_eval = sum(r.evaluated for r in results)
+    print(f"compile gate: free-permutation ES on {len(layers)} layers, "
+          f"{n_eval} evals -> {compiles} compile(s) "
+          f"(layer-independent bound {bucket_bound}), "
+          f"{st.scalar_evals} scalar-path evals, "
+          f"{st.program_shares} program shares")
     assert st.scalar_evals == 0, (
         f"free-permutation ES fell back to the scalar path for "
         f"{st.scalar_evals} candidates — the bucketed lowering regressed")
     assert compiles <= bucket_bound, (
-        f"free-permutation ES compiled {compiles} programs, bucket bound "
-        f"is {bucket_bound} — the bucketed lowering regressed "
+        f"{len(layers)}-layer free-permutation ES compiled {compiles} "
+        f"programs, layer-independent bucket bound is {bucket_bound} — "
+        f"the workload-as-data lowering regressed "
         f"(by kind: {st.compiles_by_kind})")
+    assert st.program_shares >= len(layers) - 1, (
+        f"only {st.program_shares} program shares across {len(layers)} "
+        f"layers — layers stopped sharing compiled programs")
     return [("bucketed_compile_gate", 0.0,
-             f"evals={res.evaluated};compiles={compiles};"
+             f"layers={len(layers)};evals={n_eval};compiles={compiles};"
              f"bound={bucket_bound};scalar_evals={st.scalar_evals};"
-             f"best_edp={res.best.edp:.4e}")]
+             f"program_shares={st.program_shares};"
+             f"best_edp={results[0].best.edp:.4e}")]
+
+
+def shared_smoke() -> list[tuple[str, float, str]]:
+    """Mixed-density shared-program smoke: a uniform layer and an
+    actual-data layer (tile-occupancy histogram path) evaluate through
+    ONE compiled program with <= 1e-6 parity vs the scalar oracle."""
+    rng = np.random.default_rng(0)
+    design, wl_uniform, cons = _setup(("smoke", 64, 48, 32, 0.4, 0.6))
+    wl_actual = matmul(64, 48, 32, densities={
+        "A": ("actual", (rng.random((64, 48)) < 0.35).astype(float)),
+        "B": ("uniform", 0.5)}, name="smoke-actual")
+    model = Sparseloop(design)
+    layers = [wl_uniform, wl_actual]
+    pops, nests = [], []
+    for i, wl in enumerate(layers):
+        enc = MapspaceEncoding(wl, design.arch.num_levels, cons)
+        pop = _population(enc, key=i, n=8, perm_diversity=4)
+        pops.append((enc, pop))
+        nests.append([enc.nest_of(g) for g in pop])
+    with compile_stats.track() as st:
+        outs = model.evaluate_network(layers, nests,
+                                      check_capacity=False)
+    worst = 0.0
+    for wl, (enc, pop), out in zip(layers, pops, outs):
+        for i, g in enumerate(pop):
+            ev = model.evaluate(wl, enc.nest_of(g), check_capacity=False)
+            for key, ref in (("cycles", ev.cycles),
+                             ("energy_pj", ev.energy_pj)):
+                worst = max(worst, abs(out[key][i] - ref)
+                            / max(1e-30, abs(ref)))
+    print(f"shared-program smoke: {len(layers)} mixed-density layers -> "
+          f"{st.programs} program(s), {st.compiles} compile(s), "
+          f"parity worst {worst:.2e} rel")
+    assert st.programs <= 1, st.as_dict()
+    assert st.compiles <= 1, st.as_dict()
+    assert worst <= 1e-6, f"shared-program parity broke: {worst:.3e}"
+    return [("shared_program_smoke", 0.0,
+             f"layers={len(layers)};programs={st.programs};"
+             f"compiles={st.compiles};parity_rel={worst:.2e}")]
 
 
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
@@ -160,22 +222,30 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     (wall_b, wall_t, st_b, st_t, worst, n_cand,
      n_templates) = _sweep(layers, n_per_layer, perm_diversity)
     speedup = wall_t / max(1e-9, wall_b)
-    bucket_bound = len(layers)        # one bucket per (layer, spatial shape)
+    bucket_bound = 1      # ONE bucket for the whole network, not per layer
 
     print(f"multi-layer mixed-permutation sweep: {len(layers)} layers x "
           f"{n_per_layer} candidates ({n_templates} distinct templates)")
     print(f"  per-template: {wall_t:7.1f}s  "
           f"{st_t.compiles} compiles ({st_t.compiles_by_kind})")
     print(f"  bucketed:     {wall_b:7.1f}s  "
-          f"{st_b.compiles} compiles ({st_b.compiles_by_kind})")
+          f"{st_b.compiles} compiles ({st_b.compiles_by_kind}), "
+          f"{st_b.program_shares} program shares, "
+          f"{st_b.shared_evals}/{st_b.batched_evals} shared evals")
     print(f"  wall-clock speedup: {speedup:.1f}x   "
           f"parity: worst {worst:.2e} rel")
     assert worst <= 1e-6, \
         f"bucketed vs per-template parity broke: {worst:.3e} rel"
     assert st_b.compiles <= bucket_bound, (
         f"bucketed sweep compiled {st_b.compiles} programs, bound is "
-        f"{bucket_bound} (one per layer)")
+        f"{bucket_bound} (one per bucket, independent of layer count)")
     if not smoke:
+        # >= because the bucket program may pre-exist in the process
+        # (e.g. bench_search_convergence ran first in the aggregate
+        # run), in which case ALL layers evaluate program-shared
+        assert st_b.shared_evals >= (len(layers) - 1) * n_per_layer, (
+            f"expected every layer after the first to evaluate "
+            f"program-shared, got {st_b.shared_evals} shared evals")
         assert speedup >= 3.0, (
             f"bucketed sweep only {speedup:.1f}x faster than per-template "
             f"compilation (>= 3x required)")
@@ -185,15 +255,19 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
              f"templates={n_templates};"
              f"compiles_bucketed={st_b.compiles};"
              f"compiles_per_template={st_t.compiles};"
+             f"program_shares={st_b.program_shares};"
              f"wall_bucketed_s={wall_b:.2f};"
              f"wall_per_template_s={wall_t:.2f};"
              f"speedup={speedup:.1f}x;parity_rel={worst:.2e}")]
     rows.extend(compile_gate())
+    rows.extend(shared_smoke())
     return rows
 
 
 if __name__ == "__main__":
     if "--compile-gate" in sys.argv:
         emit(compile_gate())
+    elif "--shared-smoke" in sys.argv:
+        emit(shared_smoke())
     else:
         emit(run(smoke="--smoke" in sys.argv))

@@ -17,6 +17,15 @@ nonzero when any shared CPHC-family metric regressed by more than
 job outright instead of only tripping the job timeout.  Only rows (and
 keys) present in BOTH files are compared, so running a bench subset
 gates just that subset.
+
+Refreshing the baseline
+-----------------------
+``python -m benchmarks.run --update-baseline [filters...]`` runs the
+benches (all of them, or a filtered subset) and regenerates
+``benchmarks/baseline.json`` from the fresh rows: a full run replaces
+the file, a filtered run merges by row name so the untouched rows keep
+their committed values.  Benches that fail abort the update — a broken
+bench must never overwrite a good baseline.
 """
 from __future__ import annotations
 
@@ -116,11 +125,10 @@ def gate(argv: list[str]) -> None:
     print("bench regression gate passed")
 
 
-def main() -> None:
-    if len(sys.argv) > 1 and sys.argv[1] == "--gate":
-        gate(sys.argv[2:])
-        return
-
+def run_benches(filters: list[str]
+                ) -> tuple[list[tuple[str, float, str]], list[str]]:
+    """Run the (filtered) bench modules; returns (rows, failed_names)
+    and writes ``BENCH_results.json``."""
     from . import (bench_bucketed_sweep, bench_fig1_formats,
                    bench_fig11_scnn, bench_fig12_eyerissv2,
                    bench_fig13_dstc, bench_fig15_16_stc_study,
@@ -146,7 +154,6 @@ def main() -> None:
         ("kernels", bench_kernels),
     ]
 
-    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
     rows: list[tuple[str, float, str]] = []
     failed = []
     for name, mod in modules:
@@ -166,6 +173,49 @@ def main() -> None:
                    for name, us, derived in rows], f, indent=2)
         f.write("\n")
     print(f"wrote {RESULTS_JSON} ({len(rows)} rows)")
+    return rows, failed
+
+
+def update_baseline(argv: list[str]) -> None:
+    """Regenerate ``benchmarks/baseline.json`` from a fresh run.  With
+    filters, only the matching rows are refreshed (merged by name into
+    the committed file); without, the whole baseline is replaced."""
+    filters = [a for a in argv if not a.startswith("-")]
+    rows, failed = run_benches(filters)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed} — baseline NOT "
+                         f"updated")
+    fresh = [{"name": name, "us_per_call": us, "derived": derived}
+             for name, us, derived in rows]
+    if filters and os.path.exists(BASELINE_JSON):
+        with open(BASELINE_JSON) as f:
+            baseline = json.load(f)
+        by_name = {r["name"]: r for r in baseline}
+        replaced = sum(r["name"] in by_name for r in fresh)
+        by_name.update((r["name"], r) for r in fresh)
+        merged = list(by_name.values())
+        print(f"merged {len(fresh)} fresh rows into {BASELINE_JSON} "
+              f"({replaced} replaced, {len(fresh) - replaced} added, "
+              f"{len(merged)} total)")
+    else:
+        merged = fresh
+        print(f"replacing {BASELINE_JSON} with {len(fresh)} fresh rows")
+    with open(BASELINE_JSON, "w") as f:
+        json.dump(merged, f, indent=2)
+        f.write("\n")
+    print(f"wrote {BASELINE_JSON}")
+
+
+def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] == "--gate":
+        gate(sys.argv[2:])
+        return
+    if len(sys.argv) > 1 and sys.argv[1] == "--update-baseline":
+        update_baseline(sys.argv[2:])
+        return
+
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    _, failed = run_benches(filters)
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

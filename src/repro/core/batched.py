@@ -46,15 +46,30 @@ count, keep the spatial slot shape), bounding the number of compiled
 programs for a sweep by the number of distinct (workload, bucket shape)
 pairs instead of the number of loop orders.
 
+Workload-as-data (one compile per *architecture x bucket shape*)
+----------------------------------------------------------------
+Bucketing makes the loop order per-candidate data; this layer makes the
+*workload* per-call data.  A :class:`WorkloadParams` packs everything a
+layer contributes to the math — the rank bounds vector plus, per tensor,
+a density-model kind id, a fixed-shape parameter vector and a
+tile-occupancy histogram (``density.TracedDensityStats``) — and the
+traced program takes it as a (non-vmapped) traced input.  Compiled
+programs are therefore cached by *workload structure* (rank names,
+tensor projections, output — :func:`workload_structure`) and static
+:class:`~.density.DensityCaps`, never by bounds or density values: every
+layer of a network sweep, mixed density kinds included, evaluates
+through the same compiled program, making an N-layer sweep O(buckets)
+compiles instead of O(layers x buckets).
+
 ``BatchedModel.evaluate`` matches scalar ``Sparseloop.evaluate`` to
 float64 round-off (tests/test_batched.py pins <=1e-6 relative, and
 tests/test_bucketed.py pins the padded-bucket path against both); the
 scalar engine remains the per-candidate reference oracle.
 
-Density models must provide traceable statistics (``DensityModel.batched``
-— dense / uniform / structured / banded).  Only the ``actual``-data model
-(which iterates a concrete numpy array) raises
-:class:`BatchedUnsupported`; callers fall back to the scalar path.
+Every Table-4 density model now has a traced form — the ``actual``-data
+model lowers to a per-tensor tile-occupancy histogram gather — so no
+workload is scalar-only anymore; :class:`BatchedUnsupported` survives
+only for unknown density specs.
 
 When a candidate axis is large and several devices are visible,
 ``evaluate(..., mesh=...)`` shards the population across the mesh with
@@ -80,7 +95,8 @@ from jax.experimental import enable_x64
 
 from . import compile_stats
 from .arch import Architecture
-from .density import (BatchedDensityUnsupported, DensityModel,
+from .density import (ACTUAL_ID, BatchedDensityUnsupported, DensityCaps,
+                      DensityModel, TracedDensityStats, caps_for_models,
                       make_density_model)
 from .mapping import Loop, LoopNest
 from .taxonomy import RankFormat, SAFSpec, SAFKind
@@ -92,6 +108,119 @@ WORD_BITS = 16.0  # metadata accounting word width (matches sparse.py)
 class BatchedUnsupported(NotImplementedError):
     """The (design, workload) pair has no batched path; use the scalar
     engine instead."""
+
+
+# ----------------------------------------------------------------------
+# Workload-as-data: the traced inputs of a compiled program
+# ----------------------------------------------------------------------
+def workload_structure(workload: Workload) -> tuple:
+    """The *static* part of a workload — ordered rank names, tensor
+    projections and the output tensor.  Everything else (rank bound
+    values, density parameters) is traced :class:`WorkloadParams` data,
+    so two layers with equal structure share compiled programs."""
+    return (tuple(workload.rank_bounds), workload.tensors,
+            workload.output)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadParams:
+    """Traced workload inputs of one compiled program.
+
+    ``rank_bounds`` is the (R,) bound vector in ``workload.ranks``
+    order; per tensor (in ``workload.tensors`` order) ``model_ids``
+    holds the density-model kind, ``density_params`` the fixed-shape
+    parameter rows and ``hist`` the ``(3, caps.hist)`` tile-occupancy
+    histograms (zero-width when no actual-data tensor exists).  ``caps``
+    is the static padding the arrays were built against — it must match
+    the program's caps (programs are cached per (arch, structure,
+    bucket, caps)), and ``structure`` records which workload structure
+    the arrays were packed for so binding them to the wrong program is
+    a loud error.
+
+    The histogram block is dense — one ``(3, caps.hist)`` row per
+    tensor, zero for non-actual ones — because the density *kind* is
+    traced data: any tensor may be actual-data in some layer of the
+    sweep, so every tensor needs a row for the program to stay
+    layer-agnostic.  The device copy is made once per params object
+    (:meth:`device_leaves`)."""
+
+    rank_bounds: np.ndarray
+    model_ids: np.ndarray
+    density_params: np.ndarray
+    hist: np.ndarray
+    caps: DensityCaps
+    structure: tuple = ()
+
+    def leaves(self) -> tuple:
+        """The pytree handed to the jitted program (caps are static)."""
+        return (self.rank_bounds, self.model_ids, self.density_params,
+                self.hist)
+
+    def device_leaves(self) -> tuple:
+        """``leaves()`` as (cached) device arrays — the histogram block
+        can be megabytes and the params are immutable, so the
+        host-to-device transfer happens once, not per evaluation."""
+        cached = getattr(self, "_device_leaves", None)
+        if cached is None:
+            with enable_x64():      # keep float64 whatever the caller
+                cached = tuple(jnp.asarray(x) for x in self.leaves())
+            object.__setattr__(self, "_device_leaves", cached)
+        return cached
+
+
+def _density_models(workload: Workload) -> list[DensityModel]:
+    return [make_density_model(workload.density_spec(t.name),
+                               t.size(workload.rank_bounds))
+            for t in workload.tensors]
+
+
+def pack_workload_params(workload: Workload,
+                         caps: DensityCaps | None = None
+                         ) -> WorkloadParams:
+    """Lower a concrete workload to the traced arrays of its compiled
+    program.  ``caps`` pins the static padding — pass
+    :func:`common_caps` of all layers of a sweep so every layer packs
+    into (and therefore shares) the same program."""
+    models = _density_models(workload)
+    if caps is None:
+        caps = caps_for_models(models)
+    else:
+        # exact (unrounded) requirement: any caps that fit the real
+        # tables/scans are acceptable, pow2 rounding is only a
+        # program-sharing heuristic
+        need = caps_for_models(models, round_pow2=False)
+        if not caps.covers(need):
+            raise ValueError(f"caps {caps} do not cover the workload's "
+                             f"required {need}")
+    for t, m in zip(workload.tensors, models):
+        if not m.batched:
+            raise BatchedUnsupported(
+                f"density model for tensor {t.name!r} "
+                f"({type(m).__name__}) has no traced parametric form")
+        if m.kind_id == ACTUAL_ID and m.tensor_size == 0:
+            raise ValueError(f"actual-data tensor {t.name!r} is empty")
+    rank_bounds = np.asarray(list(workload.rank_bounds.values()),
+                             np.float64)
+    model_ids = np.asarray([m.kind_id for m in models], np.int32)
+    density_params = np.stack([np.asarray(m.params(), np.float64)
+                               for m in models])
+    hist = np.zeros((len(models), 3, caps.hist))
+    for i, m in enumerate(models):
+        table = m.hist_table()
+        hist[i, :, : table.shape[1]] = table
+    return WorkloadParams(rank_bounds=rank_bounds, model_ids=model_ids,
+                          density_params=density_params, hist=hist,
+                          caps=caps, structure=workload_structure(workload))
+
+
+def common_caps(workloads) -> DensityCaps:
+    """The joint :class:`DensityCaps` of several layers — pack every
+    layer's :class:`WorkloadParams` against this so they share compiled
+    programs."""
+    caps = DensityCaps()
+    for wl in workloads:
+        caps = caps.merge(caps_for_models(_density_models(wl)))
+    return caps
 
 
 # ----------------------------------------------------------------------
@@ -335,6 +464,53 @@ class _Breakdown:
     skipped: object = 0.0
 
 
+# ----------------------------------------------------------------------
+# Shared compiled-program registry.  A "program" is the expensive unit
+# (trace + XLA compile); it is keyed by (design, workload STRUCTURE,
+# caps, template-or-bucket, check_capacity) — never by rank bounds or
+# density values, which ride in as traced WorkloadParams.  Model facades
+# (BatchedModel / BucketedModel) bind a concrete workload's params to a
+# shared program.
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class _ProgramRecord:
+    """One traced program: the jitted vmapped fn plus its compile
+    bookkeeping, shared by every facade whose structure key matches."""
+
+    kind: str
+    single: object                     # un-vmapped (batch_args, wp) fn
+    fn: object                         # jit(vmap(single, (0, None)))
+    sharded_fns: dict = dataclasses.field(default_factory=dict)
+    compiled: set = dataclasses.field(default_factory=set)
+
+    def note_compile(self, shape_key) -> None:
+        """First evaluation at a shape is when jit actually compiles."""
+        if shape_key not in self.compiled:
+            self.compiled.add(shape_key)
+            compile_stats.record_compile(self.kind)
+
+    def sharded(self, mesh):
+        key = (tuple(d.id for d in mesh.devices.flat), mesh.axis_names)
+        fn = self.sharded_fns.get(key)
+        if fn is None:
+            from jax.sharding import PartitionSpec as P
+
+            from ..runtime.compression import shard_map
+            # batch args shard their leading (candidate) axis; the
+            # workload params are replicated on every device
+            spec = P(mesh.axis_names[0])
+            fn = jax.jit(shard_map(
+                jax.vmap(self.single, in_axes=(0, None)),
+                mesh=mesh, in_specs=(spec, P()), out_specs=spec,
+                check_vma=False))
+            self.sharded_fns[key] = fn
+        return fn
+
+
+_PROGRAM_CACHE: dict = {}
+_PROGRAM_CACHE_CAP = 128
+
+
 class _TracedNestModel:
     """Shared traced three-step program over a static slot *shape*.
 
@@ -353,7 +529,8 @@ class _TracedNestModel:
     def __init__(self, design, workload: Workload,
                  slot_levels: tuple[int, ...],
                  slot_spatial: tuple[bool, ...], num_levels: int,
-                 check_capacity: bool = True):
+                 check_capacity: bool = True,
+                 caps: DensityCaps | None = None):
         arch: Architecture = design.arch
         if num_levels != arch.num_levels:
             raise ValueError(
@@ -375,43 +552,69 @@ class _TracedNestModel:
             t.name: np.asarray([r in t.ranks for r in self.ranks])
             for t in workload.tensors
         }
-        self.models: dict[str, DensityModel] = {
-            t.name: make_density_model(workload.density_spec(t.name),
-                                       t.size(workload.rank_bounds))
-            for t in workload.tensors
-        }
-        for name, m in self.models.items():
-            if not m.batched:
-                raise BatchedUnsupported(
-                    f"density model for tensor {name!r} "
-                    f"({type(m).__name__}) has no traceable closed form")
-        self._sharded_fns: dict = {}
-        self._compiled: set = set()
-        compile_stats.record_program(self.kind)
+        self._tidx = {t.name: i for i, t in enumerate(workload.tensors)}
+        # this facade's traced workload inputs (kind ids, parameter
+        # vectors, histograms, rank bounds) — the per-layer data bound
+        # to the structure-shared program at evaluation time
+        self.workload_params = pack_workload_params(workload, caps)
+        self.caps = self.workload_params.caps
+        self._stats = TracedDensityStats(self.caps)
+        self._prog: _ProgramRecord | None = None
+        self.program_shared = False
 
     # ------------------------------------------------------------------
-    def _note_compile(self, shape_key) -> None:
-        """First evaluation at a shape is when jit actually compiles."""
-        if shape_key not in self._compiled:
-            self._compiled.add(shape_key)
-            compile_stats.record_compile(self.kind)
+    def _init_program(self, token) -> None:
+        """Fetch or create the shared compiled program.  ``token``
+        completes the structural identity (the exact template for
+        BatchedModel — its rank one-hot is a trace constant — or the
+        bucket for BucketedModel).
 
-    def _sharded_fn(self, mesh):
-        key = (tuple(d.id for d in mesh.devices.flat), mesh.axis_names)
-        fn = self._sharded_fns.get(key)
-        if fn is None:
-            from jax.sharding import PartitionSpec as P
+        The record's traced closure is bound to a *detached* shallow
+        copy of this facade with the per-layer state stripped: the
+        trace only reads structural attributes (slot shape, rel masks,
+        stats, one-hot), so the cache must not pin this facade's
+        workload_params / histograms for the program's lifetime."""
+        import copy
+        key = (self.design.arch, _freeze(self.safs.formats),
+               self.safs.actions, workload_structure(self.workload),
+               self.caps, self.check_capacity, token)
+        rec = _PROGRAM_CACHE.get(key)
+        if rec is None:
+            host = copy.copy(self)
+            host.workload_params = None      # drop the heavy arrays
+            host._prog = None
+            rec = _ProgramRecord(
+                kind=self.kind, single=host._vmapped,
+                fn=jax.jit(jax.vmap(host._vmapped, in_axes=(0, None))))
+            compile_stats.record_program(self.kind)
+            if len(_PROGRAM_CACHE) >= _PROGRAM_CACHE_CAP:
+                _PROGRAM_CACHE.pop(next(iter(_PROGRAM_CACHE)))
+            _PROGRAM_CACHE[key] = rec
+        else:
+            compile_stats.record_program_share(rec.kind)
+            self.program_shared = True
+        self._prog = rec
 
-            from ..runtime.compression import shard_map
-            # one positional arg per model (BucketedModel packs bounds +
-            # rank_ids into a tuple); the spec is a pytree prefix, so it
-            # shards every leaf's leading (candidate) axis
-            spec = P(mesh.axis_names[0])
-            fn = jax.jit(shard_map(jax.vmap(self._vmapped),
-                                   mesh=mesh, in_specs=(spec,),
-                                   out_specs=spec, check_vma=False))
-            self._sharded_fns[key] = fn
-        return fn
+    def _bind_params(self, workload_params: WorkloadParams | None
+                     ) -> tuple:
+        """Validate and lower the workload params to jnp leaves."""
+        wp = workload_params or self.workload_params
+        if wp.caps != self.caps:
+            raise ValueError(
+                f"workload_params caps {wp.caps} != program caps "
+                f"{self.caps}; pack with the program's caps "
+                f"(common_caps of the sweep)")
+        if wp.structure and wp.structure != workload_structure(
+                self.workload):
+            raise ValueError(
+                "workload_params were packed for a different workload "
+                "structure (rank names / projections / output) than "
+                "this program's — metrics would be silently wrong")
+        if len(wp.rank_bounds) != len(self.ranks) or \
+                len(wp.model_ids) != len(self.workload.tensors):
+            raise ValueError("workload_params shape does not match the "
+                             "program's workload structure")
+        return wp.device_leaves()
 
     @staticmethod
     def _pad_to_multiple(arrs, n: int):
@@ -429,17 +632,39 @@ class _TracedNestModel:
     # analyze_sparse / evaluate_microarch line by line; any change to the
     # scalar model must be reflected here (the parity suites pin it).
     # ------------------------------------------------------------------
-    def _single(self, b, oh):
+    def _single(self, b, oh, wp):
         wl = self.workload
         levels = self.slot_levels
         S = self.arch.num_levels
         R = len(self.ranks)
         arch = self.arch
-        models = self.models
         rel_of = self._rel
         expanded = self.safs.expand_double_sided()
         zname = wl.output
-        zspec = wl.output_tensor
+
+        # traced workload data: rank bounds + per-tensor density params
+        rb, mids, dparams, hists = wp
+        stats = self._stats
+        tidx = self._tidx
+
+        def d_pe(name, tile):
+            i = tidx[name]
+            return stats.prob_empty(mids[i], dparams[i], hists[i], tile)
+
+        def d_ed(name, tile):
+            i = tidx[name]
+            return stats.expected_density(mids[i], dparams[i], hists[i],
+                                          tile)
+
+        def d_mx(name, tile):
+            i = tidx[name]
+            return stats.max_nnz(mids[i], dparams[i], hists[i], tile)
+
+        def total_size(t: TensorSpec):
+            """Traced ``t.size(rank_bounds)`` from the bounds vector."""
+            return _prod(
+                sum(rb[self._ridx[r]] for r in dim) - (len(dim) - 1)
+                for dim in t.projection)
 
         temporal = [j for j in range(self.num_slots)
                     if not self.slot_spatial[j]]
@@ -554,7 +779,7 @@ class _TracedNestModel:
                     else:
                         tl["rmw_read_words"] = jnp.maximum(
                             0.0, tl["update_words"]
-                            - t.size(wl.rank_bounds)
+                            - total_size(t)
                             / jnp.maximum(1.0, tl["instances"]))
 
                 dense[(t.name, s)] = tl
@@ -580,7 +805,7 @@ class _TracedNestModel:
             leader = wl.tensor(lname)
             bounds = leader_window_bounds(level_idx, rel_of[follower.name])
             tile = jnp.maximum(1.0, tile_size(leader, bounds))
-            return models[lname].prob_empty_b(tile)
+            return d_pe(lname, tile)
 
         skip_ev: dict[tuple[str, int], dict] = {}
         gate_ev: dict[tuple[str, int], dict] = {}
@@ -590,10 +815,10 @@ class _TracedNestModel:
         for saf in expanded:
             if saf.level == "compute":
                 for lname in saf.leaders:
-                    p = 1.0 - models[lname].expected_density(1)
+                    p = 1.0 - d_ed(lname, 1.0)
                     dst = (comp_skip_ev if saf.kind == SAFKind.SKIP
                            else comp_gate_ev)
-                    dst[lname] = max(dst.get(lname, 0.0), p)
+                    _merge_b(dst, lname, p)
                 continue
             lvl = self.level_names.index(saf.level)
             key = (saf.follower, lvl)
@@ -624,7 +849,7 @@ class _TracedNestModel:
                     leader = wl.tensor(lname)
                     bounds = leader_window_bounds(s + 1, rel_of[zname])
                     tile = jnp.maximum(1.0, tile_size(leader, bounds))
-                    p = models[lname].prob_empty_b(tile)
+                    p = d_pe(lname, tile)
                     dst = r_skip if saf.kind == SAFKind.SKIP else r_gate
                     _merge_b(dst, lname, p)
             sk = _union_b(r_skip)
@@ -662,7 +887,7 @@ class _TracedNestModel:
         c_act = jnp.maximum(0.0, 1.0 - c_skip - c_gate)
 
         # ---- format analyzer (formats.analyze_tile_format, traced) ----
-        def fmt_stats(fmt, dims, model: DensityModel):
+        def fmt_stats(fmt, dims, tname: str):
             dims = list(dims) or [1.0]
             nfr = len(fmt.rank_formats)
             if len(dims) < nfr:
@@ -679,12 +904,12 @@ class _TracedNestModel:
                     zip(fmt.rank_formats, dims, payload)):
                 coords_avg = fibers_avg * d
                 coords_max = fibers_max * d
-                p_ne = 1.0 - model.prob_empty_b(jnp.maximum(1.0, sz))
+                p_ne = 1.0 - d_pe(tname, jnp.maximum(1.0, sz))
                 n_blocks = _prod(dims[: i + 1])
                 occ_avg = jnp.minimum(coords_avg, n_blocks * p_ne)
                 occ_max = jnp.maximum(0.0, jnp.minimum(
                     coords_max,
-                    jnp.ceil(model.max_nnz_b(tsize)
+                    jnp.ceil(d_mx(tname, tsize)
                              / jnp.maximum(1.0, sz))))
 
                 cb = float(fmt.coord_bits)
@@ -712,8 +937,8 @@ class _TracedNestModel:
                 data_avg = data_max = tsize * 1.0
             else:
                 data_avg = jnp.minimum(
-                    tsize * 1.0, model.expected_density_b(tsize) * tsize)
-                data_max = jnp.minimum(tsize * 1.0, model.max_nnz_b(tsize))
+                    tsize * 1.0, d_ed(tname, tsize) * tsize)
+                data_max = jnp.minimum(tsize * 1.0, d_mx(tname, tsize))
             return dict(meta_avg=meta_avg, meta_max=meta_max,
                         data_avg=data_avg, data_max=data_max,
                         tile_size=tsize)
@@ -721,12 +946,11 @@ class _TracedNestModel:
         # ---- per-(tensor, level) sparse assembly ----
         sparse: dict[tuple[str, int], dict] = {}
         for t in wl.tensors:
-            model = models[t.name]
             is_out = t.name == zname
             for s in range(S):
                 tl = dense[(t.name, s)]
                 fmt = self.safs.format_for(self.level_names[s], t.name)
-                fs = fmt_stats(fmt, tl["tile_dims"], model)
+                fs = fmt_stats(fmt, tl["tile_dims"], t.name)
 
                 live = live_frac[(t.name, s)]
                 g_above = gated_from_above[(t.name, s)]
@@ -808,7 +1032,7 @@ class _TracedNestModel:
                 bounds = leader_window_bounds(lvl, rel_of[follower.name])
                 ldims = tile_dims(leader, bounds)
                 lfmt = self.safs.format_for(self.level_names[lvl], lname)
-                ls = fmt_stats(lfmt, ldims, models[lname])
+                ls = fmt_stats(lfmt, ldims, lname)
                 bits = jnp.where(ls["meta_avg"] > 0, ls["meta_avg"],
                                  ls["tile_size"] * 1.0)
                 sparse[(saf.follower, lvl)]["meta_reads"] = (
@@ -877,13 +1101,14 @@ class BatchedModel(_TracedNestModel):
     kind = "template"
 
     def __init__(self, design, workload: Workload, template: NestTemplate,
-                 check_capacity: bool = True):
+                 check_capacity: bool = True,
+                 caps: DensityCaps | None = None):
         super().__init__(
             design, workload,
             slot_levels=tuple(lvl for _, lvl, _ in template.slots),
             slot_spatial=tuple(sp for _, _, sp in template.slots),
             num_levels=template.num_levels,
-            check_capacity=check_capacity)
+            check_capacity=check_capacity, caps=caps)
         self.template = template
         for r, _, _ in template.slots:
             if r not in self._ridx:
@@ -892,36 +1117,46 @@ class BatchedModel(_TracedNestModel):
         self._onehot = np.asarray(
             [[rr == r for rr in self.ranks] for r, _, _ in template.slots],
             dtype=bool).reshape(self.num_slots, len(self.ranks))
-        self._fn = jax.jit(jax.vmap(self._vmapped))
+        self._init_program(("template", template))
 
-    def _vmapped(self, b):
-        return self._single(b, self._onehot)
+    def _vmapped(self, b, wp):
+        return self._single(b, self._onehot, wp)
 
     # ------------------------------------------------------------------
-    def evaluate(self, bounds, mesh=None) -> dict[str, np.ndarray]:
+    def evaluate(self, bounds, mesh=None,
+                 workload_params: WorkloadParams | None = None
+                 ) -> dict[str, np.ndarray]:
         """bounds: (C, num_slots) -> dict of (C,) arrays.
 
-        With a ``jax.sharding.Mesh`` of > 1 devices, the candidate axis is
-        sharded across the mesh's (single) axis with ``shard_map`` — each
-        device vmaps its population slice; the population is padded (by
-        repeating the last candidate) to a multiple of the device count
-        and the padding is stripped from the returned arrays.
+        ``workload_params`` binds a different layer's traced inputs to
+        the shared compiled program (defaults to this facade's own
+        workload).  With a ``jax.sharding.Mesh`` of > 1 devices, the
+        candidate axis is sharded across the mesh's (single) axis with
+        ``shard_map`` — each device vmaps its population slice; the
+        population is padded (by repeating the last candidate) to a
+        multiple of the device count and the padding is stripped from
+        the returned arrays.
         """
         bounds = np.asarray(bounds)
         if bounds.ndim != 2 or bounds.shape[1] != self.num_slots:
             raise ValueError(
                 f"bounds must be (C, {self.num_slots}), "
                 f"got {bounds.shape}")
-        compile_stats.record_batched_evals(len(bounds))
         with enable_x64():
+            wp = self._bind_params(workload_params)
+            # count only after the params bound — a rejected population
+            # must not inflate the counters the CI gates read
+            compile_stats.record_batched_evals(len(bounds),
+                                               shared=self.program_shared)
             if mesh is not None and mesh.size > 1:
                 (bounds,), C = self._pad_to_multiple([bounds], mesh.size)
-                self._note_compile(("sharded", mesh.size, bounds.shape))
-                out = self._sharded_fn(mesh)(
-                    jnp.asarray(bounds, jnp.float64))
+                self._prog.note_compile(
+                    ("sharded", mesh.size, bounds.shape))
+                out = self._prog.sharded(mesh)(
+                    jnp.asarray(bounds, jnp.float64), wp)
                 return {k: np.asarray(v)[:C] for k, v in out.items()}
-            self._note_compile(bounds.shape)
-            out = self._fn(jnp.asarray(bounds, jnp.float64))
+            self._prog.note_compile(bounds.shape)
+            out = self._prog.fn(jnp.asarray(bounds, jnp.float64), wp)
             return {k: np.asarray(v) for k, v in out.items()}
 
 
@@ -940,31 +1175,36 @@ class BucketedModel(_TracedNestModel):
     kind = "bucket"
 
     def __init__(self, design, workload: Workload, bucket: TemplateBucket,
-                 check_capacity: bool = True):
+                 check_capacity: bool = True,
+                 caps: DensityCaps | None = None):
         layout = bucket.slot_layout()
         super().__init__(
             design, workload,
             slot_levels=tuple(lvl for lvl, _ in layout),
             slot_spatial=tuple(sp for _, sp in layout),
             num_levels=bucket.num_levels,
-            check_capacity=check_capacity)
+            check_capacity=check_capacity, caps=caps)
         if tuple(bucket.ranks) != self.ranks:
             raise ValueError(
                 f"bucket ranks {bucket.ranks} != workload ranks "
                 f"{self.ranks}")
         self.bucket = bucket
-        self._fn = jax.jit(jax.vmap(self._vmapped))
+        self._init_program(("bucket", bucket))
 
-    def _vmapped(self, args):
+    def _vmapped(self, args, wp):
         b, ids = args
         oh = ids[:, None] == jnp.arange(len(self.ranks))
-        return self._single(b, oh)
+        return self._single(b, oh, wp)
 
     # ------------------------------------------------------------------
-    def evaluate(self, bounds, rank_ids, mesh=None) -> dict[str, np.ndarray]:
+    def evaluate(self, bounds, rank_ids, mesh=None,
+                 workload_params: WorkloadParams | None = None
+                 ) -> dict[str, np.ndarray]:
         """(bounds, rank_ids): matching (C, num_slots) arrays -> dict of
-        (C,) metric arrays.  ``mesh`` shards the candidate axis exactly
-        as in :meth:`BatchedModel.evaluate`."""
+        (C,) metric arrays.  ``workload_params`` binds a different
+        layer's traced inputs to the shared compiled program (defaults
+        to this facade's own workload); ``mesh`` shards the candidate
+        axis exactly as in :meth:`BatchedModel.evaluate`."""
         bounds = np.asarray(bounds)
         rank_ids = np.asarray(rank_ids)
         if bounds.ndim != 2 or bounds.shape[1] != self.num_slots:
@@ -979,26 +1219,32 @@ class BucketedModel(_TracedNestModel):
                 rank_ids.max(initial=0) >= len(self.ranks):
             raise ValueError(f"rank_ids out of range [0, "
                              f"{len(self.ranks)})")
-        compile_stats.record_batched_evals(len(bounds))
         with enable_x64():
+            wp = self._bind_params(workload_params)
+            # count only after the params bound — a rejected population
+            # must not inflate the counters the CI gates read
+            compile_stats.record_batched_evals(len(bounds),
+                                               shared=self.program_shared)
             if mesh is not None and mesh.size > 1:
                 (bounds, rank_ids), C = self._pad_to_multiple(
                     [bounds, rank_ids], mesh.size)
-                self._note_compile(("sharded", mesh.size, bounds.shape))
-                out = self._sharded_fn(mesh)(
+                self._prog.note_compile(
+                    ("sharded", mesh.size, bounds.shape))
+                out = self._prog.sharded(mesh)(
                     (jnp.asarray(bounds, jnp.float64),
-                     jnp.asarray(rank_ids, jnp.int64)))
+                     jnp.asarray(rank_ids, jnp.int64)), wp)
                 return {k: np.asarray(v)[:C] for k, v in out.items()}
-            self._note_compile(bounds.shape)
-            out = self._fn((jnp.asarray(bounds, jnp.float64),
-                            jnp.asarray(rank_ids, jnp.int64)))
+            self._prog.note_compile(bounds.shape)
+            out = self._prog.fn((jnp.asarray(bounds, jnp.float64),
+                                 jnp.asarray(rank_ids, jnp.int64)), wp)
             return {k: np.asarray(v) for k, v in out.items()}
 
 
 # ----------------------------------------------------------------------
-# Content-keyed model cache: jit compiles are expensive (seconds); callers
-# across Sparseloop instances / benchmark reps must hit the same compiled
-# program for the same (design, workload, template-or-bucket).
+# Content-keyed facade cache.  Facades are cheap (they pack WorkloadParams
+# and bind a shared program); the expensive traced programs live in
+# _PROGRAM_CACHE keyed by workload *structure*, so facades for different
+# layers of a network automatically share compiled programs.
 # ----------------------------------------------------------------------
 _MODEL_CACHE: dict = {}
 _MODEL_CACHE_CAP = 128
@@ -1015,19 +1261,20 @@ def _freeze(x):
 
 
 def _cache_key(design, workload: Workload, shape_key,
-               check_capacity: bool):
+               check_capacity: bool, caps):
     return (design.arch, _freeze(design.safs.formats), design.safs.actions,
             workload.name, tuple(workload.rank_bounds.items()),
             workload.tensors, workload.output, _freeze(workload.densities),
-            shape_key, check_capacity)
+            shape_key, check_capacity, caps)
 
 
-def _get_model(cls, design, workload: Workload, shape, check_capacity):
-    key = _cache_key(design, workload, shape, check_capacity)
+def _get_model(cls, design, workload: Workload, shape, check_capacity,
+               caps=None):
+    key = _cache_key(design, workload, shape, check_capacity, caps)
     model = _MODEL_CACHE.get(key)
     if model is None:
         model = cls(design, workload, shape,
-                    check_capacity=check_capacity)
+                    check_capacity=check_capacity, caps=caps)
         if len(_MODEL_CACHE) >= _MODEL_CACHE_CAP:
             _MODEL_CACHE.pop(next(iter(_MODEL_CACHE)))
         _MODEL_CACHE[key] = model
@@ -1037,17 +1284,31 @@ def _get_model(cls, design, workload: Workload, shape, check_capacity):
 
 
 def get_batched_model(design, workload: Workload, template: NestTemplate,
-                      check_capacity: bool = True) -> BatchedModel:
-    """Memoized :class:`BatchedModel` constructor."""
+                      check_capacity: bool = True,
+                      caps: DensityCaps | None = None) -> BatchedModel:
+    """Memoized :class:`BatchedModel` constructor.  ``caps`` forces the
+    static density capacities (pass :func:`common_caps` of a sweep so
+    mixed-density layers share one compiled program)."""
     return _get_model(BatchedModel, design, workload, template,
-                      check_capacity)
+                      check_capacity, caps)
 
 
 def get_bucketed_model(design, workload: Workload, bucket: TemplateBucket,
-                       check_capacity: bool = True) -> BucketedModel:
-    """Memoized :class:`BucketedModel` constructor."""
+                       check_capacity: bool = True,
+                       caps: DensityCaps | None = None) -> BucketedModel:
+    """Memoized :class:`BucketedModel` constructor.  ``caps`` forces the
+    static density capacities (pass :func:`common_caps` of a sweep so
+    mixed-density layers share one compiled program)."""
     return _get_model(BucketedModel, design, workload, bucket,
-                      check_capacity)
+                      check_capacity, caps)
+
+
+def clear_caches() -> None:
+    """Drop the facade and compiled-program caches (a testing hook:
+    exact compile-count assertions otherwise depend on process-global
+    cache state).  ``compile_stats`` counters are left untouched."""
+    _MODEL_CACHE.clear()
+    _PROGRAM_CACHE.clear()
 
 
 def group_by_template(nests) -> dict[NestTemplate, list[int]]:
@@ -1059,8 +1320,11 @@ def group_by_template(nests) -> dict[NestTemplate, list[int]]:
 
 
 def batched_supported(design, workload: Workload) -> bool:
-    """True when every tensor's density model has a traceable closed form
-    (the batched path refuses actual-data models)."""
+    """True when every tensor's density model has a traceable form.
+
+    Every Table-4 model now does — actual-data lowers through its
+    tile-occupancy histogram — so this only rejects unknown density
+    specs (and stays as the dispatch guard for future model kinds)."""
     try:
         for t in workload.tensors:
             m = make_density_model(workload.density_spec(t.name),

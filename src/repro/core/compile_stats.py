@@ -34,14 +34,24 @@ import dataclasses
 class CompileStats:
     """Counters over one tracking window (or the process lifetime)."""
 
-    #: traced evaluator programs constructed (BatchedModel/BucketedModel)
+    #: traced programs constructed (shared across model facades whose
+    #: workload *structure* matches — see core.batched._PROGRAM_CACHE)
     programs: int = 0
     #: XLA compilations: first evaluation of a (program, shape) pair
     compiles: int = 0
     #: content-cache hits in get_batched_model / get_bucketed_model
     cache_hits: int = 0
+    #: times an existing traced program was rebound to a new facade —
+    #: i.e. a different (workload, params) evaluated through a shared
+    #: program instead of compiling its own
+    program_shares: int = 0
     #: candidates evaluated through a compiled (vmap+jit) program
     batched_evals: int = 0
+    #: the subset of batched_evals that went through a *shared* program
+    #: (one whose facade did not itself create the traced program); the
+    #: rest ran program-specialized.  Multi-layer sweeps want this to be
+    #: (layers - 1) / layers of the total.
+    shared_evals: int = 0
     #: candidates evaluated through the scalar fallback path
     scalar_evals: int = 0
     #: per-kind compile breakdown, e.g. {"template": 3, "bucket": 1}
@@ -62,7 +72,9 @@ class CompileStats:
             programs=self.programs - other.programs,
             compiles=self.compiles - other.compiles,
             cache_hits=self.cache_hits - other.cache_hits,
+            program_shares=self.program_shares - other.program_shares,
             batched_evals=self.batched_evals - other.batched_evals,
+            shared_evals=self.shared_evals - other.shared_evals,
             scalar_evals=self.scalar_evals - other.scalar_evals,
             compiles_by_kind=by_kind)
 
@@ -90,8 +102,17 @@ def record_cache_hit() -> None:
     STATS.cache_hits += 1
 
 
-def record_batched_evals(n: int) -> None:
+def record_program_share(kind: str) -> None:
+    """An existing traced program was rebound to a new model facade
+    (a different workload's params will flow through it)."""
+    STATS.program_shares += 1
+    del kind
+
+
+def record_batched_evals(n: int, shared: bool = False) -> None:
     STATS.batched_evals += int(n)
+    if shared:
+        STATS.shared_evals += int(n)
 
 
 def record_scalar_evals(n: int) -> None:

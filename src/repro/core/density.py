@@ -23,6 +23,27 @@ Supported models (Table 4):
 
 All prob/expectation math is done in log-space (lgamma) so it is both
 numerically stable and usable from inside jitted/vmapped mapper code.
+
+Traced parametric interface (workload-as-data)
+----------------------------------------------
+Every model also lowers to a *fixed-shape parameter vector*
+(:meth:`DensityModel.params`, ``NUM_DENSITY_PARAMS`` floats) plus a
+small integer ``kind_id``, and each statistic has a static traced form
+``<kind>_<stat>_t(params, hist, tile_size)`` whose inputs are all JAX
+values.  :class:`TracedDensityStats` bundles them behind one runtime
+``lax.switch`` on the model id, so a single compiled program serves
+tensors (and whole network layers) of *mixed* density kinds — the
+model parameters ride as traced data instead of trace-time constants.
+
+The ``actual``-data model — which used to be scalar-only because it
+iterates a concrete numpy array — lowers through a per-tensor
+*tile-occupancy histogram* (:meth:`ActualDataModel.hist_table`):
+``(3, tensor_size)`` exact ``(prob_empty, expected_density, max_nnz)``
+rows for every aligned 1-D tile size, precomputed once from the array
+(O(n log n) via a cumulative-sum sweep) and gathered by traced tile
+size at evaluation time.  Shape-dependent statistics (banded row scans,
+histogram tables) are padded to static :class:`DensityCaps` so programs
+stay shape-stable across layers.
 """
 from __future__ import annotations
 
@@ -31,6 +52,13 @@ import math
 from typing import Sequence
 
 import numpy as np
+
+#: density-model kind ids (the ``lax.switch`` index of TracedDensityStats)
+DENSE_ID, UNIFORM_ID, STRUCTURED_ID, BANDED_ID, ACTUAL_ID = range(5)
+MODEL_KINDS = ("dense", "uniform", "structured", "banded", "actual")
+
+#: fixed length of every model's traced parameter vector
+NUM_DENSITY_PARAMS = 4
 
 
 def _log_comb(n: float, k: float) -> float:
@@ -52,18 +80,308 @@ def _log_comb_b(n, k):
 class BatchedDensityUnsupported(NotImplementedError):
     """Raised when a density model has no closed-form batched (JAX) path.
 
-    Only the ``actual``-data model remains scalar-only: it iterates a
-    concrete numpy array and cannot be traced.  Callers (core.batched)
-    catch this and fall back to the scalar engine.
+    Every Table-4 model (actual-data included, via its tile-occupancy
+    histogram) now has a traced form, so this is only raised for unknown
+    specs; it is kept for API compatibility with callers that still
+    guard the batched dispatch.
     """
+
+
+# ----------------------------------------------------------------------
+# Static capacities for the shape-dependent traced statistics
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DensityCaps:
+    """Static padding capacities of a traced density program.
+
+    Traced programs need static array shapes; coordinate-dependent
+    statistics don't have any.  The caps bound them: ``coord`` >= the
+    row count of any banded tensor (row-scan length), ``div`` >= the
+    isqrt of any banded tensor's size (tile-shape divisor scan), and
+    ``hist`` >= the size of any actual-data tensor (histogram table
+    length).  Zero means "no tensor of that family" and prunes the
+    corresponding ``lax.switch`` branch entirely.  Caps are part of a
+    compiled program's cache key; :func:`caps_for_models` rounds them up
+    to powers of two so layers of similar size land on the same program.
+    """
+
+    coord: int = 0
+    div: int = 0
+    hist: int = 0
+
+    def merge(self, other: "DensityCaps") -> "DensityCaps":
+        return DensityCaps(coord=max(self.coord, other.coord),
+                           div=max(self.div, other.div),
+                           hist=max(self.hist, other.hist))
+
+    def covers(self, need: "DensityCaps") -> bool:
+        return (self.coord >= need.coord and self.div >= need.div
+                and self.hist >= need.hist)
+
+
+def _pow2_cap(n: int) -> int:
+    return 1 << (int(n) - 1).bit_length() if n > 0 else 0
+
+
+def caps_for_models(models: Sequence["DensityModel"],
+                    round_pow2: bool = True) -> DensityCaps:
+    """The smallest :class:`DensityCaps` covering ``models`` (rounded up
+    to powers of two by default, so similarly-sized layers share)."""
+    coord = div = hist = 0
+    for m in models:
+        if isinstance(m, BandedModel):
+            coord = max(coord, m.rows)
+            div = max(div, max(1, math.isqrt(max(1, m.rows * m.cols))))
+        elif isinstance(m, ActualDataModel):
+            hist = max(hist, m.tensor_size)
+    if round_pow2:
+        coord, div, hist = (_pow2_cap(coord), _pow2_cap(div),
+                            _pow2_cap(hist))
+    return DensityCaps(coord=coord, div=div, hist=hist)
+
+
+# ----------------------------------------------------------------------
+# Static traced statistics: <kind>_<stat>_t(params, hist, tile_size).
+# ``params`` is the model's NUM_DENSITY_PARAMS vector, ``hist`` its
+# (3, H) tile-occupancy histogram (only read by the actual-data kind).
+# All are pure jnp closed forms — the single source of truth for both
+# the instance ``*_b`` wrappers and the TracedDensityStats switch.
+# ----------------------------------------------------------------------
+def dense_prob_empty_t(p, h, t):
+    import jax.numpy as jnp
+    del p, h
+    return jnp.zeros_like(t * 1.0)
+
+
+def dense_expected_density_t(p, h, t):
+    import jax.numpy as jnp
+    del p, h
+    return jnp.ones_like(t * 1.0)
+
+
+def dense_max_nnz_t(p, h, t):
+    del p, h
+    return t * 1.0
+
+
+def uniform_prob_empty_t(p, h, t):
+    """params: [tensor_size, nnz, density, -]."""
+    import jax.numpy as jnp
+    del h
+    S, N = p[0], p[1]
+    T = jnp.minimum(t * 1.0, S)
+    return jnp.exp(_log_comb_b(S - N, T) - _log_comb_b(S, T))
+
+
+def uniform_expected_density_t(p, h, t):
+    import jax.numpy as jnp
+    del h
+    return jnp.ones_like(t * 1.0) * p[2]
+
+
+def uniform_max_nnz_t(p, h, t):
+    import jax.numpy as jnp
+    del h
+    return jnp.minimum(t * 1.0, p[1])
+
+
+def structured_prob_empty_t(p, h, t):
+    """params: [tensor_size, n, m, -]."""
+    import jax.numpy as jnp
+    del h
+    n, m = p[1], p[2]
+    tt = t * 1.0
+    lp = _log_comb_b(m - n, tt) - _log_comb_b(m, tt)
+    return jnp.where(tt >= m - n + 1, 0.0, jnp.exp(lp))
+
+
+def structured_expected_density_t(p, h, t):
+    import jax.numpy as jnp
+    del h
+    return jnp.ones_like(t * 1.0) * (p[1] / p[2])
+
+
+def structured_max_nnz_t(p, h, t):
+    import jax.numpy as jnp
+    del h
+    n, m = p[1], p[2]
+    tt = t * 1.0
+    full = jnp.floor(tt / m)
+    rem = tt - full * m
+    return jnp.minimum(tt, full * n + jnp.minimum(rem, n))
+
+
+def _banded_grid_t(p, t, caps: DensityCaps):
+    """Traced mirror of ``BandedModel._tile_shape`` + aligned-grid setup
+    with the band geometry as traced params [size, rows, cols, w].
+
+    ``tr`` is the largest divisor of the tile size <= floor(sqrt(t))
+    (what the scalar decrement loop finds), found by scanning the static
+    divisor range ``1..caps.div``."""
+    import jax.numpy as jnp
+    rows = jnp.round(p[1]).astype(jnp.int64)
+    cols = jnp.round(p[2]).astype(jnp.int64)
+    ti = jnp.maximum(1.0, jnp.round(t * 1.0)).astype(jnp.int64)
+    d = jnp.arange(1, caps.div + 1, dtype=jnp.int64)
+    root = jnp.floor(jnp.sqrt(ti.astype(jnp.float64))).astype(jnp.int64)
+    ok = (ti % d == 0) & (d <= root)
+    tr = jnp.max(jnp.where(ok, d, 1))
+    tc = ti // tr
+    nr = jnp.maximum(1, rows // tr)
+    nc = jnp.maximum(1, cols // tc)
+    return ti, tr, tc, nr, nc, rows, cols
+
+
+def banded_prob_empty_t(p, h, t, caps: DensityCaps):
+    import jax.numpy as jnp
+    del h
+    _, tr, tc, nr, nc, rows, _cols = _banded_grid_t(p, t, caps)
+    w = jnp.round(p[3]).astype(jnp.int64)
+    ti = jnp.arange(caps.coord, dtype=jnp.int64)
+    r0 = ti * tr
+    hh = jnp.minimum(tr, rows - r0)
+    # nonempty tiles of row-strip ti: the band's column footprint
+    # [r0 - w, r0 + hh - 1 + w] must meet [tj*tc, (tj+1)*tc - 1]
+    tj_hi = jnp.minimum(nc - 1, (r0 + hh - 1 + w) // tc)
+    tj_lo = jnp.maximum(0, -((-(r0 - w - tc + 1)) // tc))
+    nonempty = jnp.clip(tj_hi - tj_lo + 1, 0, nc)
+    total = jnp.sum(jnp.where(ti < nr, nonempty, 0))
+    return (nr * nc - total) * 1.0 / (nr * nc)
+
+
+def banded_expected_density_t(p, h, t, caps: DensityCaps):
+    import jax.numpy as jnp
+    del h
+    ti, tr, tc, nr, nc, rows, _cols = _banded_grid_t(p, t, caps)
+    w = jnp.round(p[3]).astype(jnp.int64)
+    i = jnp.arange(caps.coord, dtype=jnp.int64)
+    covered_rows = jnp.minimum(nr * tr, rows)
+    covered_cols = nc * tc          # c1 is never clamped to cols
+    ln = jnp.clip(jnp.minimum(covered_cols, i + w + 1)
+                  - jnp.maximum(0, i - w), 0, None)
+    nnz = jnp.sum(jnp.where(i < covered_rows, ln, 0))
+    return nnz * 1.0 / ((nr * nc) * 1.0 * ti)
+
+
+def banded_max_nnz_t(p, h, t, caps: DensityCaps):
+    import jax
+    import jax.numpy as jnp
+    del h
+    ti, tr, tc, nr, _nc, rows, cols = _banded_grid_t(p, t, caps)
+    w = jnp.round(p[3]).astype(jnp.int64)
+    i = jnp.arange(caps.coord, dtype=jnp.int64)
+    tix = i // tr
+    r0 = tix * tr
+    # the densest aligned tile sits on the diagonal: slide each
+    # row-strip's column window to hug the band
+    c0 = jnp.clip(r0 - w, 0, jnp.maximum(0, cols - tc))
+    ln = jnp.clip(jnp.minimum(c0 + tc, i + w + 1)
+                  - jnp.maximum(c0, i - w), 0, None)
+    ln = jnp.where(i < jnp.minimum(nr * tr, rows), ln, 0)
+    per_tile = jax.ops.segment_sum(ln, tix, num_segments=caps.coord)
+    best = jnp.max(per_tile)
+    root = jnp.floor(jnp.sqrt(ti.astype(jnp.float64))).astype(jnp.int64)
+    fallback = jnp.minimum(ti, (2 * w + 1) * root + 1)
+    return jnp.where(best > 0, jnp.minimum(ti, best), fallback) * 1.0
+
+
+def _actual_index(p, t):
+    """Histogram row for a (clamped) traced tile size; params[0] is the
+    valid table length (the concrete array's size)."""
+    import jax.numpy as jnp
+    n = jnp.round(p[0]).astype(jnp.int64)
+    tt = jnp.round(t * 1.0).astype(jnp.int64)
+    return jnp.clip(jnp.minimum(tt, n), 1, None) - 1
+
+
+def actual_prob_empty_t(p, h, t):
+    return h[0, _actual_index(p, t)]
+
+
+def actual_expected_density_t(p, h, t):
+    return h[1, _actual_index(p, t)]
+
+
+def actual_max_nnz_t(p, h, t):
+    return h[2, _actual_index(p, t)]
+
+
+class TracedDensityStats:
+    """Per-kind traced tile statistics behind one runtime model-id
+    switch: ``prob_empty(kind, params, hist, tile_size)`` (and
+    ``expected_density`` / ``max_nnz``) dispatch on the *traced* kind id
+    with ``lax.switch``, so one compiled program evaluates tensors of
+    mixed density kinds and the kind itself is workload data.  Branches
+    whose static capacity is zero (no banded / no actual tensor can ever
+    be selected) are pruned to the trivial dense form so pure-statistical
+    programs pay nothing for them."""
+
+    def __init__(self, caps: DensityCaps):
+        self.caps = caps
+        banded_ok = caps.coord > 0 and caps.div > 0
+        actual_ok = caps.hist > 0
+
+        def with_caps(fn):
+            return lambda p, h, t: fn(p, h, t, caps)
+
+        self._pe = (dense_prob_empty_t, uniform_prob_empty_t,
+                    structured_prob_empty_t,
+                    with_caps(banded_prob_empty_t) if banded_ok
+                    else dense_prob_empty_t,
+                    actual_prob_empty_t if actual_ok
+                    else dense_prob_empty_t)
+        self._ed = (dense_expected_density_t, uniform_expected_density_t,
+                    structured_expected_density_t,
+                    with_caps(banded_expected_density_t) if banded_ok
+                    else dense_expected_density_t,
+                    actual_expected_density_t if actual_ok
+                    else dense_expected_density_t)
+        self._mx = (dense_max_nnz_t, uniform_max_nnz_t,
+                    structured_max_nnz_t,
+                    with_caps(banded_max_nnz_t) if banded_ok
+                    else dense_max_nnz_t,
+                    actual_max_nnz_t if actual_ok else dense_max_nnz_t)
+
+    @staticmethod
+    def _switch(branches, kind, params, hist, tile_size):
+        import jax
+        import jax.numpy as jnp
+        return jax.lax.switch(jnp.asarray(kind, jnp.int32), list(branches),
+                              params, hist, tile_size * 1.0)
+
+    def prob_empty(self, kind, params, hist, tile_size):
+        return self._switch(self._pe, kind, params, hist, tile_size)
+
+    def expected_density(self, kind, params, hist, tile_size):
+        return self._switch(self._ed, kind, params, hist, tile_size)
+
+    def max_nnz(self, kind, params, hist, tile_size):
+        return self._switch(self._mx, kind, params, hist, tile_size)
 
 
 class DensityModel:
     """Base interface; tile_size is the flattened number of elements."""
 
     #: True when the *_b methods below are traceable closed forms usable
-    #: from vmapped/jitted code (core.batched).
+    #: from vmapped/jitted code (core.batched).  Every Table-4 model now
+    #: is (actual-data via its tile-occupancy histogram).
     batched: bool = False
+
+    #: index into MODEL_KINDS / the TracedDensityStats switch
+    kind_id: int = DENSE_ID
+
+    def params(self) -> np.ndarray:
+        """Fixed-shape traced parameter vector (NUM_DENSITY_PARAMS,).
+
+        The traced ``<kind>_<stat>_t`` forms consume this, so a compiled
+        program can evaluate a *different* instance of the same kind by
+        swapping the vector — model parameters are workload data."""
+        return np.zeros(NUM_DENSITY_PARAMS)
+
+    def hist_table(self) -> np.ndarray:
+        """(3, n) tile-occupancy histogram; only actual-data models have
+        a non-empty one."""
+        return np.zeros((3, 0))
 
     def prob_empty_b(self, tile_size):
         """Traceable ``prob_empty``: tile_size is a jnp scalar/array."""
@@ -112,6 +430,7 @@ class DenseModel(DensityModel):
     tensor_size: int = 1
     density: float = 1.0
     batched = True
+    kind_id = DENSE_ID
 
     def prob_empty(self, tile_size: int) -> float:
         return 0.0
@@ -120,15 +439,13 @@ class DenseModel(DensityModel):
         return tile_size
 
     def prob_empty_b(self, tile_size):
-        import jax.numpy as jnp
-        return jnp.zeros_like(tile_size * 1.0)
+        return dense_prob_empty_t(None, None, tile_size)
 
     def expected_density_b(self, tile_size):
-        import jax.numpy as jnp
-        return jnp.ones_like(tile_size * 1.0)
+        return dense_expected_density_t(None, None, tile_size)
 
     def max_nnz_b(self, tile_size):
-        return tile_size * 1.0
+        return dense_max_nnz_t(None, None, tile_size)
 
 
 @dataclasses.dataclass
@@ -157,20 +474,19 @@ class UniformModel(DensityModel):
     def max_nnz(self, tile_size: int) -> int:
         return min(tile_size, self.nnz)
 
+    kind_id = UNIFORM_ID
+
+    def params(self) -> np.ndarray:
+        return np.asarray([self.tensor_size, self.nnz, self.density, 0.0])
+
     def prob_empty_b(self, tile_size):
-        import jax.numpy as jnp
-        S, N = float(self.tensor_size), float(self.nnz)
-        T = jnp.minimum(tile_size * 1.0, S)
-        lp = _log_comb_b(S - N, T) - _log_comb_b(S, T)
-        return jnp.exp(lp)
+        return uniform_prob_empty_t(self.params(), None, tile_size)
 
     def expected_density_b(self, tile_size):
-        import jax.numpy as jnp
-        return jnp.full_like(tile_size * 1.0, self.density)
+        return uniform_expected_density_t(self.params(), None, tile_size)
 
     def max_nnz_b(self, tile_size):
-        import jax.numpy as jnp
-        return jnp.minimum(tile_size * 1.0, float(self.nnz))
+        return uniform_max_nnz_t(self.params(), None, tile_size)
 
 
 @dataclasses.dataclass
@@ -209,24 +525,21 @@ class StructuredModel(DensityModel):
         return min(tile_size, full * self.n + min(rem, self.n))
 
     batched = True
+    kind_id = STRUCTURED_ID
+
+    def params(self) -> np.ndarray:
+        return np.asarray([self.tensor_size, self.n, self.m, 0.0],
+                          np.float64)
 
     def prob_empty_b(self, tile_size):
-        import jax.numpy as jnp
-        t = tile_size * 1.0
-        lp = _log_comb_b(float(self.m - self.n), t) \
-            - _log_comb_b(float(self.m), t)
-        return jnp.where(t >= self.m - self.n + 1, 0.0, jnp.exp(lp))
+        return structured_prob_empty_t(self.params(), None, tile_size)
 
     def expected_density_b(self, tile_size):
-        import jax.numpy as jnp
-        return jnp.full_like(tile_size * 1.0, self.n / self.m)
+        return structured_expected_density_t(self.params(), None,
+                                             tile_size)
 
     def max_nnz_b(self, tile_size):
-        import jax.numpy as jnp
-        t = tile_size * 1.0
-        full = jnp.floor(t / self.m)
-        rem = t - full * self.m
-        return jnp.minimum(t, full * self.n + jnp.minimum(rem, self.n))
+        return structured_max_nnz_t(self.params(), None, tile_size)
 
 
 @dataclasses.dataclass
@@ -317,72 +630,37 @@ class BandedModel(DensityModel):
         return min(tile_size, (2 * self.half_band + 1) * int(math.sqrt(tile_size)) + 1)
 
     # ---------------- traceable closed forms (core.batched) ----------------
-    def _grid_b(self, tile_size):
-        """Traceable mirror of ``_tile_shape`` + aligned-grid setup.
+    kind_id = BANDED_ID
 
-        Returns int64 scalars (t, tr, tc, nr, nc): ``tr`` is the largest
-        divisor of the tile size <= floor(sqrt(t)) (what the scalar
-        decrement loop finds), found by scanning the static divisor range
-        ``1..isqrt(rows * cols)``.
-        """
-        import jax.numpy as jnp
-        t = jnp.maximum(1.0, jnp.round(tile_size * 1.0)).astype(jnp.int64)
-        dmax = max(1, math.isqrt(max(1, self.rows * self.cols)))
-        d = jnp.arange(1, dmax + 1, dtype=jnp.int64)
-        root = jnp.floor(jnp.sqrt(t.astype(jnp.float64))).astype(jnp.int64)
-        ok = (t % d == 0) & (d <= root)
-        tr = jnp.max(jnp.where(ok, d, 1))
-        tc = t // tr
-        nr = jnp.maximum(1, self.rows // tr)
-        nc = jnp.maximum(1, self.cols // tc)
-        return t, tr, tc, nr, nc
+    def params(self) -> np.ndarray:
+        return np.asarray([self.tensor_size, self.rows, self.cols,
+                           self.half_band], np.float64)
+
+    def _self_caps(self) -> DensityCaps:
+        """Exact (unrounded) capacities for the instance wrappers."""
+        return DensityCaps(
+            coord=self.rows,
+            div=max(1, math.isqrt(max(1, self.rows * self.cols))))
 
     def prob_empty_b(self, tile_size):
-        import jax.numpy as jnp
-        _, tr, tc, nr, nc = self._grid_b(tile_size)
-        w = self.half_band
-        ti = jnp.arange(self.rows, dtype=jnp.int64)
-        r0 = ti * tr
-        h = jnp.minimum(tr, self.rows - r0)
-        # nonempty tiles of row-strip ti: the band's column footprint
-        # [r0 - w, r0 + h - 1 + w] must meet [tj*tc, (tj+1)*tc - 1]
-        tj_hi = jnp.minimum(nc - 1, (r0 + h - 1 + w) // tc)
-        tj_lo = jnp.maximum(0, -((-(r0 - w - tc + 1)) // tc))
-        nonempty = jnp.clip(tj_hi - tj_lo + 1, 0, nc)
-        total = jnp.sum(jnp.where(ti < nr, nonempty, 0))
-        return (nr * nc - total) * 1.0 / (nr * nc)
+        return banded_prob_empty_t(self.params(), None, tile_size,
+                                   self._self_caps())
 
     def expected_density_b(self, tile_size):
-        import jax.numpy as jnp
-        t, tr, _tc, nr, nc = self._grid_b(tile_size)
-        w = self.half_band
-        i = jnp.arange(self.rows, dtype=jnp.int64)
-        covered_rows = jnp.minimum(nr * tr, self.rows)
-        covered_cols = nc * _tc          # c1 is never clamped to cols
-        ln = jnp.clip(jnp.minimum(covered_cols, i + w + 1)
-                      - jnp.maximum(0, i - w), 0, None)
-        nnz = jnp.sum(jnp.where(i < covered_rows, ln, 0))
-        return nnz * 1.0 / ((nr * nc) * 1.0 * t)
+        return banded_expected_density_t(self.params(), None, tile_size,
+                                         self._self_caps())
 
     def max_nnz_b(self, tile_size):
-        import jax
-        import jax.numpy as jnp
-        t, tr, tc, nr, _nc = self._grid_b(tile_size)
-        w = self.half_band
-        i = jnp.arange(self.rows, dtype=jnp.int64)
-        ti = i // tr
-        r0 = ti * tr
-        # the densest aligned tile sits on the diagonal: slide each
-        # row-strip's column window to hug the band
-        c0 = jnp.clip(r0 - w, 0, jnp.maximum(0, self.cols - tc))
-        ln = jnp.clip(jnp.minimum(c0 + tc, i + w + 1)
-                      - jnp.maximum(c0, i - w), 0, None)
-        ln = jnp.where(i < jnp.minimum(nr * tr, self.rows), ln, 0)
-        per_tile = jax.ops.segment_sum(ln, ti, num_segments=self.rows)
-        best = jnp.max(per_tile)
-        root = jnp.floor(jnp.sqrt(t.astype(jnp.float64))).astype(jnp.int64)
-        fallback = jnp.minimum(t, (2 * w + 1) * root + 1)
-        return jnp.where(best > 0, jnp.minimum(t, best), fallback) * 1.0
+        return banded_max_nnz_t(self.params(), None, tile_size,
+                                self._self_caps())
+
+
+#: tile-occupancy histograms keyed by the identity of the source array:
+#: the table costs O(n log n) to build (and the workload's density spec
+#: holds the same ndarray across model rebuilds), so it is computed once
+#: per concrete array.  Entries keep the array alive so ids stay valid.
+_HIST_CACHE: dict[int, tuple[object, np.ndarray]] = {}
+_HIST_CACHE_CAP = 32
 
 
 @dataclasses.dataclass
@@ -392,12 +670,19 @@ class ActualDataModel(DensityModel):
     This is the paper's "actual data" model: slower but exact, used e.g. for
     the Eyeriss-V2 validation where statistical approximation is the main
     error source (Sec. 6.3.2).
+
+    The traced path lowers the array to a device-resident *tile-occupancy
+    histogram* (:meth:`hist_table`): exact per-tile-size statistics
+    precomputed once, gathered by traced tile size — so actual-data
+    workloads ride the batched/bucketed JAX engine like every other
+    density kind.
     """
 
     data: np.ndarray
 
     def __post_init__(self) -> None:
         self._flat_nz = (np.asarray(self.data) != 0)
+        self._hist: np.ndarray | None = None
 
     @property
     def tensor_size(self) -> int:  # type: ignore[override]
@@ -443,6 +728,67 @@ class ActualDataModel(DensityModel):
 
     def max_nnz(self, tile_size: int) -> int:
         return int(self._tiled_nnz(min(tile_size, self.tensor_size)).max())
+
+    # ------------- tile-occupancy histogram (traced lowering) -------------
+    batched = True
+    kind_id = ACTUAL_ID
+
+    def params(self) -> np.ndarray:
+        return np.asarray([self.tensor_size, self.density, 0.0, 0.0],
+                          np.float64)
+
+    def hist_table(self) -> np.ndarray:
+        """(3, tensor_size) exact per-tile-size statistics: row 0 is
+        ``prob_empty``, row 1 ``expected_density``, row 2 ``max_nnz``
+        for every aligned 1-D tile size ``t = 1..tensor_size`` of the
+        flattened array — the same semantics as the scalar methods above
+        (non-divisible tails dropped, the remainder-free prefix tiled).
+        Built from one cumulative sum, vectorized over divisor blocks
+        (all tile sizes sharing a tile *count* ``m = n // t`` are one
+        numpy gather): O(n log n) element work in O(sqrt n) Python
+        iterations.  Cached per source array."""
+        if self._hist is not None:
+            return self._hist
+        key = id(self.data)
+        cached = _HIST_CACHE.get(key)
+        if cached is not None and cached[0] is self.data:
+            self._hist = cached[1]
+            return self._hist
+        flat = self._flat_nz.reshape(-1).astype(np.int64)
+        n = flat.size
+        out = np.zeros((3, n))
+        cs = np.concatenate([[0], np.cumsum(flat)])
+        t = 1
+        while t <= n:
+            m = n // t                     # aligned tiles at this size
+            t_hi = n // m                  # all t in [t, t_hi] share m
+            ts = np.arange(t, t_hi + 1)
+            edges = ts[None, :] * np.arange(m + 1)[:, None]
+            tiles = np.diff(cs[edges], axis=0)          # (m, len(ts))
+            out[0, ts - 1] = (tiles == 0).mean(axis=0)
+            out[1, ts - 1] = tiles.mean(axis=0) / ts
+            out[2, ts - 1] = tiles.max(axis=0)
+            t = t_hi + 1
+        self._hist = out
+        if len(_HIST_CACHE) >= _HIST_CACHE_CAP:
+            _HIST_CACHE.pop(next(iter(_HIST_CACHE)))
+        _HIST_CACHE[key] = (self.data, out)
+        return out
+
+    def _hist_b(self):
+        import jax.numpy as jnp
+        return jnp.asarray(self.hist_table())
+
+    def prob_empty_b(self, tile_size):
+        return actual_prob_empty_t(self.params(), self._hist_b(),
+                                   tile_size)
+
+    def expected_density_b(self, tile_size):
+        return actual_expected_density_t(self.params(), self._hist_b(),
+                                         tile_size)
+
+    def max_nnz_b(self, tile_size):
+        return actual_max_nnz_t(self.params(), self._hist_b(), tile_size)
 
 
 def make_density_model(spec: object, tensor_size: int) -> DensityModel:

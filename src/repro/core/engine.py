@@ -100,25 +100,30 @@ class Sparseloop:
 
     # ------------------------------------------------------------------
     def batched_model(self, workload: Workload, template,
-                      check_capacity: bool = True):
+                      check_capacity: bool = True, caps=None):
         """Compiled batched evaluator for one loop-structure template
-        (content-cached — repeated calls reuse the jitted program)."""
+        (content-cached — facades for workloads with equal *structure*
+        share the underlying compiled program; ``caps`` forces common
+        density capacities across a mixed-density sweep)."""
         from .batched import get_batched_model
         return get_batched_model(self.design, workload, template,
-                                 check_capacity=check_capacity)
+                                 check_capacity=check_capacity, caps=caps)
 
     def bucketed_model(self, workload: Workload, bucket,
-                       check_capacity: bool = True):
+                       check_capacity: bool = True, caps=None):
         """Compiled bucketed evaluator for one padded template family
-        (content-cached — repeated calls reuse the jitted program)."""
+        (content-cached — facades for workloads with equal *structure*
+        share the underlying compiled program; ``caps`` forces common
+        density capacities across a mixed-density sweep)."""
         from .batched import get_bucketed_model
         return get_bucketed_model(self.design, workload, bucket,
-                                  check_capacity=check_capacity)
+                                  check_capacity=check_capacity, caps=caps)
 
     def evaluate_batch(self, workload: Workload,
                        nests: Sequence[LoopNest] | Iterable[LoopNest],
                        check_capacity: bool = True,
-                       bucketed: bool = True) -> dict[str, np.ndarray]:
+                       bucketed: bool = True,
+                       caps=None) -> dict[str, np.ndarray]:
         """Evaluate a population of mappings in one (or a few) jitted JAX
         computations.
 
@@ -129,11 +134,13 @@ class Sparseloop:
         data.  A mixed-permutation population therefore costs a handful
         of compiles (one per bucket) instead of one per loop structure;
         pass ``bucketed=False`` for the legacy one-compile-per-exact-
-        template grouping.  Returns per-candidate arrays aligned with the
-        input order: cycles, energy_pj, edp, valid,
-        compute_actual/gated/skipped.  Raises ``BatchedUnsupported`` when
-        the workload's density models have no traceable closed form — use
-        the scalar ``evaluate`` loop then.
+        template grouping.  Workload parameters (rank bounds, density
+        models — actual-data included, via its tile-occupancy histogram)
+        are traced inputs, so layers of equal structure reuse compiled
+        programs across calls; ``caps`` (see ``batched.common_caps``)
+        aligns the static density capacities of a mixed-density sweep.
+        Returns per-candidate arrays aligned with the input order:
+        cycles, energy_pj, edp, valid, compute_actual/gated/skipped.
         """
         from .batched import group_by_bucket, group_by_template, lower_nests
         nests = list(nests)
@@ -150,7 +157,7 @@ class Sparseloop:
         if not bucketed:
             for template, idxs in group_by_template(nests).items():
                 model = self.batched_model(workload, template,
-                                           check_capacity)
+                                           check_capacity, caps=caps)
                 bounds = np.stack([template.bounds_of(nests[i])
                                    for i in idxs])
                 scatter(idxs, model.evaluate(bounds))
@@ -158,10 +165,39 @@ class Sparseloop:
 
         ranks = tuple(workload.rank_bounds)
         for bucket, idxs in group_by_bucket(nests, ranks).items():
-            model = self.bucketed_model(workload, bucket, check_capacity)
+            model = self.bucketed_model(workload, bucket, check_capacity,
+                                        caps=caps)
             bounds, ids, order = lower_nests(bucket, nests, idxs)
             scatter(order, model.evaluate(bounds, ids))
         return out
+
+    def evaluate_network(self, workloads: Sequence[Workload],
+                         nests_per_workload,
+                         check_capacity: bool = True,
+                         bucketed: bool = True
+                         ) -> list[dict[str, np.ndarray]]:
+        """Evaluate one candidate population per network layer through
+        *shared* compiled programs.
+
+        The common density capacities of all layers are computed up
+        front, so structurally-identical layers — whatever their rank
+        bounds or density kinds (uniform / structured / banded /
+        actual-data mixed freely) — lower onto the same (arch, bucket)
+        program: an N-layer sweep costs O(#buckets) compiles,
+        independent of N.  Returns one ``evaluate_batch``-shaped dict
+        per layer, aligned with ``workloads``."""
+        from .batched import common_caps
+        workloads = list(workloads)
+        nests_per_workload = list(nests_per_workload)
+        if len(workloads) != len(nests_per_workload):
+            raise ValueError(
+                f"{len(workloads)} workloads but "
+                f"{len(nests_per_workload)} nest populations")
+        caps = common_caps(workloads)
+        return [self.evaluate_batch(wl, nests,
+                                    check_capacity=check_capacity,
+                                    bucketed=bucketed, caps=caps)
+                for wl, nests in zip(workloads, nests_per_workload)]
 
     # ------------------------------------------------------------------
     def cphc(self, workload: Workload, nest: LoopNest,

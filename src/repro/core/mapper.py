@@ -11,9 +11,12 @@ per-candidate data, so mixed-permutation slices cost one jitted
 computation per bucket instead of one per loop structure — while the
 scalar ``Sparseloop.evaluate`` remains the per-candidate reference
 oracle (the winning mapping is always re-evaluated through it).
-``use_batched="auto"`` batches only groups large enough to amortize the
-jit compile; custom objectives or coordinate-dependent density models
-fall back to the scalar loop automatically.
+Workload parameters (rank bounds, density models — actual-data via its
+tile-occupancy histogram) are traced inputs of those programs, so
+searches over different layers of a network reuse each other's
+compiles.  ``use_batched="auto"`` batches only groups large enough to
+amortize the jit compile; custom objectives (which need the full
+per-candidate ``Evaluation``) fall back to the scalar loop.
 """
 from __future__ import annotations
 
@@ -186,8 +189,8 @@ def search(design: Design, workload: Workload,
     level's permutation is constrained, else per loop-structure group);
     ``True`` batches everything regardless of size; ``False`` forces the
     scalar loop.  A custom ``objective`` (which needs the full
-    per-candidate ``Evaluation``) and workloads whose density models
-    have no traceable closed form always use the scalar loop.
+    per-candidate ``Evaluation``) always uses the scalar loop; every
+    density model (actual-data included) batches.
     """
     if use_batched not in (False, True, "auto"):
         raise ValueError(f"use_batched must be False, True or 'auto', "

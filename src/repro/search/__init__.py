@@ -17,8 +17,8 @@ Entry points: :func:`run_search` here, or
 """
 from .encoding import MapspaceEncoding, prime_factors
 from .log import GenerationRecord, SearchLog
-from .runner import (PopulationEvaluator, SearchConfig, population_mesh,
-                     run_search)
+from .runner import (KNOWN_SEARCH_ENV, PopulationEvaluator, SearchConfig,
+                     population_mesh, run_search, validate_search_env)
 from .strategies import (STRATEGIES, EvolutionStrategy, HillClimb,
                          RandomSearch, SimulatedAnnealing, Strategy,
                          crossover, make_strategy, mutate)
@@ -26,8 +26,8 @@ from .strategies import (STRATEGIES, EvolutionStrategy, HillClimb,
 __all__ = [
     "MapspaceEncoding", "prime_factors",
     "GenerationRecord", "SearchLog",
-    "PopulationEvaluator", "SearchConfig", "population_mesh",
-    "run_search",
+    "KNOWN_SEARCH_ENV", "PopulationEvaluator", "SearchConfig",
+    "population_mesh", "run_search", "validate_search_env",
     "STRATEGIES", "EvolutionStrategy", "HillClimb", "RandomSearch",
     "SimulatedAnnealing", "Strategy", "crossover", "make_strategy",
     "mutate",

@@ -32,6 +32,7 @@ program instead of one compile per loop order.
 """
 from __future__ import annotations
 
+import functools
 import itertools
 import math
 
@@ -212,13 +213,17 @@ class MapspaceEncoding:
         return out
 
     # ------------------------------------------------------------------
-    @property
+    @functools.cached_property
     def bucket(self) -> TemplateBucket:
         """The single padded bucket every genome of this encoding lowers
         into: each level carries all ranks as temporal slots (absent
         loops ride as unit bounds) plus the constraint-fixed spatial
         slots.  The whole mapspace slice — every permutation — evaluates
-        through one compiled ``BucketedModel`` program."""
+        through one compiled ``BucketedModel`` program; and because the
+        bucket depends only on rank *names* and the spatial shape (the
+        bounds are per-candidate data, the rank bounds and density
+        parameters traced ``WorkloadParams``), encodings of different
+        network layers emit the same bucket and share that program."""
         spatial = self.cons.spatial or {}
         n_spatial = tuple(
             sum(1 for b in spatial.get(lvl, {}).values() if b > 1)

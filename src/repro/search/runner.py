@@ -20,11 +20,16 @@ the bucket route, and ``batch_threshold`` — overridable via the
 force either path deterministically — is the smallest group handed to a
 compiled program (groups below it run scalar; dispatch depends only on
 group sizes, never on jit-cache state, so a run stays bit-reproducible
-from its key).  Workloads whose density models have no traceable closed
-form (actual-data) transparently fall back to per-candidate scalar
-evaluation — same search, slower fitness.  Scalar-path candidates are
-counted in ``repro.core.compile_stats`` so tests and the CI compile-gate
-can assert "this search ran fully batched".
+from its key).  ``REPRO_SEARCH_*`` values are validated at
+``SearchConfig`` construction: malformed integers raise, non-canonical
+booleans and unknown ``REPRO_SEARCH_*`` names warn instead of silently
+falling back to defaults.  Every density model now has a traced form
+(actual-data lowers to a tile-occupancy histogram), and workload
+parameters ride as traced inputs, so mixed-density populations and
+searches over different layers share compiled programs instead of
+falling back to the scalar path.  Scalar-path candidates are counted in
+``repro.core.compile_stats`` so tests and the CI compile-gate can
+assert "this search ran fully batched".
 
 The returned :class:`mapper.SearchResult` carries the winning mapping
 *validated through the scalar oracle*: the runner keeps a small archive
@@ -36,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 
 import numpy as np
 
@@ -74,6 +80,36 @@ def population_mesh(min_devices: int = 2):
 BATCH_THRESHOLD = 32
 
 
+#: REPRO_SEARCH_* variables this package understands — anything else
+#: with the prefix is almost certainly a typo and gets a warning
+KNOWN_SEARCH_ENV = {
+    "REPRO_SEARCH_BATCH_THRESHOLD":
+        "smallest group worth a compile (SearchConfig.batch_threshold)",
+    "REPRO_SEARCH_BUCKETED":
+        "bucketed dispatch toggle (SearchConfig.bucketed)",
+    "REPRO_SEARCH_DEVICES":
+        "simulated device count (repro.launch.hillclimb)",
+}
+
+_TRUE_WORDS = frozenset({"1", "true", "yes", "on"})
+_FALSE_WORDS = frozenset({"0", "false", "no", "off", ""})
+
+
+def validate_search_env() -> list[str]:
+    """Warning messages for unknown ``REPRO_SEARCH_*`` environment
+    variables (returned, and emitted as ``warnings.warn``).  Run at
+    every :class:`SearchConfig` construction so a typo'd variable never
+    silently no-ops an entire CI run."""
+    msgs = [f"unknown environment variable {name} — known REPRO_SEARCH_* "
+            f"variables: {sorted(KNOWN_SEARCH_ENV)}"
+            for name in sorted(os.environ)
+            if name.startswith("REPRO_SEARCH_")
+            and name not in KNOWN_SEARCH_ENV]
+    for msg in msgs:
+        warnings.warn(msg, stacklevel=3)
+    return msgs
+
+
 def _env_int(name: str, default: int) -> int:
     raw = os.environ.get(name)
     if raw is None:
@@ -88,7 +124,16 @@ def _env_bool(name: str, default: bool) -> bool:
     raw = os.environ.get(name)
     if raw is None:
         return default
-    return raw.strip().lower() not in ("0", "false", "no", "off", "")
+    word = raw.strip().lower()
+    if word in _TRUE_WORDS:
+        return True
+    if word in _FALSE_WORDS:
+        return False
+    warnings.warn(
+        f"{name}={raw!r} is not a recognized boolean "
+        f"(use one of {sorted(_TRUE_WORDS | _FALSE_WORDS - {''})}); "
+        f"treating it as true", stacklevel=3)
+    return True
 
 
 @dataclasses.dataclass
@@ -102,6 +147,11 @@ class SearchConfig:
       (huge value => everything scalar; 0/1 => everything batched).
     * ``REPRO_SEARCH_BUCKETED`` — "0"/"false" disables the bucketed
       route (population falls back to per-template grouping).
+
+    Values are validated rather than silently defaulted: a malformed
+    integer raises, a non-canonical boolean warns (and is treated as
+    true), and any other ``REPRO_SEARCH_*`` variable in the environment
+    warns as a probable typo (see :func:`validate_search_env`).
     """
 
     batch_threshold: int = dataclasses.field(
@@ -110,15 +160,19 @@ class SearchConfig:
     bucketed: bool = dataclasses.field(
         default_factory=lambda: _env_bool("REPRO_SEARCH_BUCKETED", True))
 
+    def __post_init__(self) -> None:
+        validate_search_env()
+
 
 class PopulationEvaluator:
     """Fitness function over genome populations.
 
     Default route: bucket-relative decode -> ONE batched (optionally
-    sharded) evaluation for the entire population, permutations as data.
-    Fallbacks: per-template grouping (``config.bucketed=False``) and the
-    per-candidate scalar path for groups below ``config.batch_threshold``
-    or for workloads with no traceable density model (actual-data).
+    sharded) evaluation for the entire population, permutations as data
+    and every density kind (actual-data included) traced.  Fallbacks:
+    per-template grouping (``config.bucketed=False``) and the
+    per-candidate scalar path for groups below
+    ``config.batch_threshold``.
     """
 
     def __init__(self, design, workload: Workload, enc: MapspaceEncoding,

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core import Sparseloop, matmul
-from repro.core.batched import BatchedUnsupported, NestTemplate
+from repro.core.batched import NestTemplate
 from repro.core.mapper import MapspaceConstraints, search
 from repro.core.presets import (bitmask_design, coordinate_list_design,
                                 dense_design, two_level_arch)
@@ -96,13 +96,32 @@ def test_parity_banded_density():
                                                     rel=1e-6)
 
 
-def test_unsupported_density_model_raises():
-    """actual-data models remain the only scalar-only density model."""
+def test_parity_actual_data_density():
+    """actual-data workloads — formerly the only scalar-only density
+    model — now ride the batched engine through the tile-occupancy
+    histogram lowering; parity with the scalar oracle."""
+    rng = np.random.default_rng(7)
     wl = matmul(M, K, N, densities={
-        "A": ("actual", np.ones((M, K)))})
-    model = Sparseloop(dense_design(ARCH))
-    with pytest.raises(BatchedUnsupported):
-        model.batched_model(wl, SPMSPM_TEMPLATE)
+        "A": ("actual", (rng.random((M, K)) < 0.35).astype(float)),
+        "B": ("uniform", DB)})
+    design = coordinate_list_design(ARCH)
+    model = Sparseloop(design)
+    bounds = _bounds()[::5]
+    out = model.batched_model(wl, SPMSPM_TEMPLATE,
+                              check_capacity=False).evaluate(bounds)
+    for i, b in enumerate(bounds):
+        ev = model.evaluate(wl, SPMSPM_TEMPLATE.nest_with(b),
+                            check_capacity=False)
+        assert out["cycles"][i] == pytest.approx(ev.cycles, rel=1e-6)
+        assert out["energy_pj"][i] == pytest.approx(ev.energy_pj,
+                                                    rel=1e-6)
+
+
+def test_unknown_density_spec_unsupported():
+    """batched_supported still guards against unknown density specs."""
+    from repro.core.batched import batched_supported
+    wl = matmul(M, K, N, densities={"A": ("no-such-model", 0.5)})
+    assert not batched_supported(dense_design(ARCH), wl)
 
 
 def test_template_roundtrip():

@@ -192,6 +192,8 @@ def test_evaluate_batch_buckets_mixed_population():
 
 
 def test_compile_stats_counts_programs_and_shapes():
+    from repro.core.batched import clear_caches
+    clear_caches()        # exact compile counts need a cold cache
     wl = matmul(8, 8, 8, densities={"A": ("uniform", 0.5)})
     design = dense_design(two_level_arch())
     enc = MapspaceEncoding(wl, 2, MapspaceConstraints(seed=0))
@@ -242,6 +244,24 @@ def test_search_config_env_override(monkeypatch):
     assert SearchConfig().bucketed is True
 
 
+def test_search_config_env_validation_warns(monkeypatch):
+    """Unknown REPRO_SEARCH_* names and non-canonical boolean values
+    warn instead of silently no-op'ing / silently coercing."""
+    import warnings as _warnings
+    monkeypatch.setenv("REPRO_SEARCH_BUKETED", "0")       # typo'd name
+    with pytest.warns(UserWarning, match="REPRO_SEARCH_BUKETED"):
+        SearchConfig()
+    monkeypatch.delenv("REPRO_SEARCH_BUKETED")
+    monkeypatch.setenv("REPRO_SEARCH_BUCKETED", "maybe")
+    with pytest.warns(UserWarning, match="not a recognized boolean"):
+        cfg = SearchConfig()
+    assert cfg.bucketed is True      # legacy coercion, now loud
+    monkeypatch.delenv("REPRO_SEARCH_BUCKETED")
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")      # clean env: no warnings
+        SearchConfig()
+
+
 def test_search_config_forces_both_paths_deterministically():
     """Same key, scalar-forced vs bucket-forced dispatch: identical
     winner (to round-off), and the compile counters prove which path
@@ -286,6 +306,100 @@ def test_population_evaluator_bucketed_off_uses_templates():
     assert (finite == np.isfinite(b["edp"])).all()
     np.testing.assert_allclose(a["edp"][finite], b["edp"][finite],
                                rtol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# workload-as-data: one compiled program across layers / density kinds
+# ----------------------------------------------------------------------
+def test_shared_program_across_layers_uniform():
+    """Layers with different rank bounds and densities but equal
+    *structure* evaluate through ONE compiled bucket program: the rank
+    bounds and density parameters are traced WorkloadParams, not trace
+    constants.  Parity vs the per-layer scalar oracle."""
+    from repro.core.batched import clear_caches
+    clear_caches()        # exact program/compile counts: cold cache
+    design = dense_design(two_level_arch(buffer_kwords=62))
+    model = Sparseloop(design)
+    layers = [matmul(16, 16, 16, densities={"A": ("uniform", 0.25)}),
+              matmul(32, 8, 16, densities={"A": ("uniform", 0.5),
+                                           "B": ("uniform", 0.7)}),
+              matmul(8, 32, 16)]
+    pops, nests = [], []
+    for i, wl in enumerate(layers):
+        enc, pop = _population(wl, 2, CONS, 12, key=20 + i)
+        pops.append((enc, pop))
+        nests.append([enc.nest_of(g) for g in pop])
+    with compile_stats.track() as st:
+        outs = model.evaluate_network(layers, nests,
+                                      check_capacity=False)
+    assert st.programs == 1, st.as_dict()
+    assert st.compiles == 1, st.as_dict()
+    assert st.program_shares >= len(layers) - 1
+    # layers after the first ran program-shared, the first specialized
+    assert st.shared_evals == 2 * 12 and st.batched_evals == 3 * 12
+    for wl, (enc, pop), out in zip(layers, pops, outs):
+        for i, g in enumerate(pop):
+            ev = model.evaluate(wl, enc.nest_of(g), check_capacity=False)
+            assert out["cycles"][i] == pytest.approx(ev.cycles, rel=1e-6)
+            assert out["energy_pj"][i] == pytest.approx(ev.energy_pj,
+                                                        rel=1e-6)
+
+
+def test_shared_program_mixed_density_kinds():
+    """A uniform layer, a banded layer and an actual-data layer — the
+    density *kind* is traced data too (model-id switch + tile-occupancy
+    histogram), so all three share one compiled program under common
+    caps.  Parity <= 1e-6 vs the scalar oracle for every layer."""
+    from repro.core.batched import clear_caches
+    clear_caches()        # exact program/compile counts: cold cache
+    rng = np.random.default_rng(11)
+    design = coordinate_list_design(two_level_arch(buffer_kwords=59))
+    model = Sparseloop(design)
+    layers = [
+        matmul(M, K, N, densities={"A": ("uniform", 0.3),
+                                   "B": ("uniform", 0.6)}),
+        matmul(M, K, N, densities={
+            "A": ("banded", {"rows": M, "cols": K, "half_band": 2})}),
+        matmul(M, K, N, densities={
+            "A": ("actual", (rng.random((M, K)) < 0.35).astype(float)),
+            "B": ("uniform", 0.5)}),
+    ]
+    pops, nests = [], []
+    for i, wl in enumerate(layers):
+        enc, pop = _population(wl, 2, CONS, 10, key=30 + i)
+        pops.append((enc, pop))
+        nests.append([enc.nest_of(g) for g in pop])
+    with compile_stats.track() as st:
+        outs = model.evaluate_network(layers, nests,
+                                      check_capacity=False)
+    assert st.programs == 1 and st.compiles == 1, st.as_dict()
+    assert st.scalar_evals == 0
+    for wl, (enc, pop), out in zip(layers, pops, outs):
+        for i, g in enumerate(pop):
+            ev = model.evaluate(wl, enc.nest_of(g), check_capacity=False)
+            assert out["cycles"][i] == pytest.approx(ev.cycles, rel=1e-6)
+            assert out["energy_pj"][i] == pytest.approx(ev.energy_pj,
+                                                        rel=1e-6)
+            assert out["edp"][i] == pytest.approx(ev.edp, rel=1e-6)
+
+
+def test_workload_params_caps_mismatch_raises():
+    """Binding params packed under different caps to a program is a
+    loud error, not a silent shape-triggered recompile."""
+    from repro.core.batched import (DensityCaps, get_bucketed_model,
+                                    pack_workload_params)
+    design = dense_design(two_level_arch(buffer_kwords=58))
+    enc, pop = _population(WL, 2, CONS, 4, key=41)
+    bucket, bounds, ids = enc.decode_bucketed(pop)
+    bm = get_bucketed_model(design, WL, bucket, check_capacity=False)
+    wrong = pack_workload_params(WL, caps=DensityCaps(hist=64))
+    with pytest.raises(ValueError, match="caps"):
+        bm.evaluate(bounds, ids, workload_params=wrong)
+    # params packed for a structurally different workload are rejected
+    from repro.core.workload import conv2d
+    other = pack_workload_params(conv2d(1, 4, 4, 4, 4, 3, 3))
+    with pytest.raises(ValueError, match="structure"):
+        bm.evaluate(bounds, ids, workload_params=other)
 
 
 def test_mapper_free_permutation_search_batched_vs_scalar():

@@ -180,17 +180,23 @@ def test_mapper_search_strategy_rejects_callable_objective():
         search(DESIGN, WL, CONS, strategy="gradient-descent")
 
 
-def test_strategy_search_supports_scalar_only_density_models():
-    """Actual-data density models have no batched path; the runner falls
-    back to per-candidate scalar evaluation transparently."""
+def test_strategy_search_actual_density_rides_batched_engine():
+    """Actual-data density models — formerly the scalar-only fallback —
+    now lower to a tile-occupancy histogram and ride the bucketed
+    engine: zero scalar-path population evaluations."""
+    from repro.core import compile_stats
     rng = np.random.default_rng(0)
     wl = matmul(8, 8, 8, densities={
         "A": ("actual", (rng.random((8, 8)) < 0.4).astype(float))})
-    res = run_search(DESIGN, wl,
-                     MapspaceConstraints(budget=32, seed=0),
-                     strategy="es", key=0, pop_size=16)
+    with compile_stats.track() as st:
+        res = run_search(DESIGN, wl,
+                         MapspaceConstraints(budget=32, seed=0),
+                         strategy="es", key=0, pop_size=16,
+                         batch_threshold=1)
     assert res.best is not None and res.best.result.valid
     res.best_nest.validate(wl)
+    assert st.scalar_evals == 0, st.as_dict()
+    assert st.batched_evals >= 32
 
 
 # ----------------------------------------------------------------------
