@@ -24,7 +24,11 @@ Refreshing the baseline
 benches (all of them, or a filtered subset) and regenerates
 ``benchmarks/baseline.json`` from the fresh rows: a full run replaces
 the file, a filtered run merges by row name so the untouched rows keep
-their committed values.  Benches that fail abort the update — a broken
+their committed values.  Rows carry their bench-module provenance, and
+the merge PRUNES stale rows — a row whose module was removed from the
+registry, or whose module just re-ran without re-emitting it (renamed
+benchmark) — instead of silently keeping them forever and weakening the
+``--gate`` comparison.  Benches that fail abort the update — a broken
 bench must never overwrite a good baseline.
 """
 from __future__ import annotations
@@ -33,6 +37,7 @@ import json
 import os
 import sys
 import traceback
+import warnings
 
 RESULTS_JSON = "BENCH_results.json"
 BASELINE_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -125,20 +130,19 @@ def gate(argv: list[str]) -> None:
     print("bench regression gate passed")
 
 
-def run_benches(filters: list[str]
-                ) -> tuple[list[tuple[str, float, str]], list[str]]:
-    """Run the (filtered) bench modules; returns (rows, failed_names)
-    and writes ``BENCH_results.json``."""
-    from . import (bench_bucketed_sweep, bench_fig1_formats,
-                   bench_fig11_scnn, bench_fig12_eyerissv2,
-                   bench_fig13_dstc, bench_fig15_16_stc_study,
-                   bench_fig17_codesign, bench_kernels,
-                   bench_search_convergence, bench_stc_exact,
-                   bench_table5_cphc, bench_table7_compression,
-                   bench_vmapper)
-    from .common import emit
+def registry() -> list[tuple[str, object]]:
+    """The bench-module registry (name, module) — the single source of
+    truth for which benchmarks exist; baseline rows record these names
+    as provenance so ``--update-baseline`` can prune stale rows."""
+    from . import (bench_bucketed_sweep, bench_codesign,
+                   bench_fig1_formats, bench_fig11_scnn,
+                   bench_fig12_eyerissv2, bench_fig13_dstc,
+                   bench_fig15_16_stc_study, bench_fig17_codesign,
+                   bench_kernels, bench_search_convergence,
+                   bench_stc_exact, bench_table5_cphc,
+                   bench_table7_compression, bench_vmapper)
 
-    modules = [
+    return [
         ("fig1_formats", bench_fig1_formats),
         ("table5_cphc", bench_table5_cphc),
         ("fig11_scnn", bench_fig11_scnn),
@@ -151,55 +155,110 @@ def run_benches(filters: list[str]
         ("vmapper", bench_vmapper),
         ("search_convergence", bench_search_convergence),
         ("bucketed_sweep", bench_bucketed_sweep),
+        ("codesign_search", bench_codesign),
         ("kernels", bench_kernels),
     ]
 
-    rows: list[tuple[str, float, str]] = []
+
+def run_benches(filters: list[str]
+                ) -> tuple[list[dict], list[str]]:
+    """Run the (filtered) bench modules; returns (row_dicts,
+    failed_names) and writes ``BENCH_results.json``.  Each row dict
+    carries ``module`` provenance (which registry entry emitted it)."""
+    from .common import emit
+
+    rows: list[dict] = []
     failed = []
-    for name, mod in modules:
+    for name, mod in registry():
         if filters and not any(f in name for f in filters):
             continue
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
         try:
-            rows.extend(mod.run())
+            mod_rows = mod.run()
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             failed.append(name)
-            rows.append((name, -1.0, f"FAILED:{type(e).__name__}"))
+            mod_rows = [(name, -1.0, f"FAILED:{type(e).__name__}")]
+        rows.extend({"name": rname, "us_per_call": us,
+                     "derived": derived, "module": name}
+                    for rname, us, derived in mod_rows)
     print(f"\n{'=' * 72}\n== CSV (name,us_per_call,derived)\n{'=' * 72}")
-    emit(rows)
+    emit([(r["name"], r["us_per_call"], r["derived"]) for r in rows])
     with open(RESULTS_JSON, "w") as f:
-        json.dump([{"name": name, "us_per_call": us, "derived": derived}
-                   for name, us, derived in rows], f, indent=2)
+        json.dump(rows, f, indent=2)
         f.write("\n")
     print(f"wrote {RESULTS_JSON} ({len(rows)} rows)")
     return rows, failed
 
 
+def merge_baseline(baseline: list[dict], fresh: list[dict],
+                   ran_modules: set[str],
+                   known_modules: set[str]) -> list[dict]:
+    """Merge fresh rows from a filtered run into the committed baseline,
+    PRUNING stale rows instead of keeping them forever:
+
+      * a baseline row whose ``module`` is no longer in the registry
+        (benchmark removed/renamed) is dropped with a warning;
+      * a baseline row whose module DID run this time but did not
+        re-emit the row (bench row renamed) is dropped with a warning;
+      * legacy rows without provenance are kept only while no fresh row
+        replaces them, with a warning to regenerate the full baseline.
+
+    Without pruning, renamed/removed rows linger in ``baseline.json``
+    and the ``--gate`` step silently compares nothing for them."""
+    fresh_names = {r["name"] for r in fresh}
+    kept: list[dict] = []
+    for row in baseline:
+        module = row.get("module")
+        if row["name"] in fresh_names:
+            continue                       # replaced by a fresh row
+        if module is None:
+            warnings.warn(
+                f"baseline row {row['name']!r} has no bench-module "
+                f"provenance; keeping it — run a full "
+                f"`--update-baseline` to regenerate and tag it")
+            kept.append(row)
+            continue
+        if module not in known_modules:
+            warnings.warn(
+                f"pruning stale baseline row {row['name']!r}: its bench "
+                f"module {module!r} is no longer in the registry")
+            continue
+        if module in ran_modules:
+            warnings.warn(
+                f"pruning stale baseline row {row['name']!r}: bench "
+                f"module {module!r} ran but no longer emits it "
+                f"(renamed/removed row)")
+            continue
+        kept.append(row)
+    return kept + list(fresh)
+
+
 def update_baseline(argv: list[str]) -> None:
     """Regenerate ``benchmarks/baseline.json`` from a fresh run.  With
     filters, only the matching rows are refreshed (merged by name into
-    the committed file); without, the whole baseline is replaced."""
+    the committed file, stale rows pruned — see :func:`merge_baseline`);
+    without, the whole baseline is replaced."""
     filters = [a for a in argv if not a.startswith("-")]
     rows, failed = run_benches(filters)
     if failed:
         raise SystemExit(f"benchmarks failed: {failed} — baseline NOT "
                          f"updated")
-    fresh = [{"name": name, "us_per_call": us, "derived": derived}
-             for name, us, derived in rows]
+    known = {name for name, _ in registry()}
+    ran = {r["module"] for r in rows}
     if filters and os.path.exists(BASELINE_JSON):
         with open(BASELINE_JSON) as f:
             baseline = json.load(f)
-        by_name = {r["name"]: r for r in baseline}
-        replaced = sum(r["name"] in by_name for r in fresh)
-        by_name.update((r["name"], r) for r in fresh)
-        merged = list(by_name.values())
-        print(f"merged {len(fresh)} fresh rows into {BASELINE_JSON} "
-              f"({replaced} replaced, {len(fresh) - replaced} added, "
-              f"{len(merged)} total)")
+        old_names = {r["name"] for r in baseline}
+        merged = merge_baseline(baseline, rows, ran, known)
+        replaced = sum(r["name"] in old_names for r in rows)
+        pruned = len(baseline) + len(rows) - replaced - len(merged)
+        print(f"merged {len(rows)} fresh rows into {BASELINE_JSON} "
+              f"({replaced} replaced, {len(rows) - replaced} added, "
+              f"{pruned} stale pruned, {len(merged)} total)")
     else:
-        merged = fresh
-        print(f"replacing {BASELINE_JSON} with {len(fresh)} fresh rows")
+        merged = rows
+        print(f"replacing {BASELINE_JSON} with {len(rows)} fresh rows")
     with open(BASELINE_JSON, "w") as f:
         json.dump(merged, f, indent=2)
         f.write("\n")

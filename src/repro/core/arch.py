@@ -6,10 +6,23 @@ storage level has a capacity, word width, access bandwidth and per-action
 energy numbers (Accelergy-style, Sec. 5.4).
 
 Levels are indexed the way the analyzers use them: 0 = innermost.
+
+Architecture-as-data
+--------------------
+The batched engine (core.batched) splits an architecture the same way it
+splits a workload: the *topology* (:func:`arch_structure` — level names,
+which the SAF specs reference, plus the compute-unit name) is the static
+part a compiled program is keyed on, while every per-level scalar
+(capacities, bandwidths, per-action energies, PE counts) packs into a
+fixed-shape traced :class:`ArchParams` bound at evaluation time — so a
+whole design sweep shares one compiled program per bucket, and a
+co-search population can carry one design point per candidate.
 """
 from __future__ import annotations
 
 import dataclasses
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +49,15 @@ class StorageLevel:
             object.__setattr__(self, "metadata_read_energy_pj",
                                0.25 * self.read_energy_pj)
 
+    def canonical(self) -> tuple:
+        """Post-``__post_init__`` field tuple — this level's cache-key
+        identity.  The ``-1.0`` construction sentinels (write/metadata
+        energies derived from the read energy) are resolved by the time
+        this runs, so two levels that differ only at construction alias
+        and any *real* field difference never does."""
+        return tuple(getattr(self, f.name)
+                     for f in dataclasses.fields(self))
+
 
 @dataclasses.dataclass(frozen=True)
 class ComputeLevel:
@@ -48,6 +70,11 @@ class ComputeLevel:
     gated_energy_pj: float = 0.05
     #: MACs per instance per cycle
     throughput: float = 1.0
+
+    def canonical(self) -> tuple:
+        """Field tuple — this compute unit's cache-key identity."""
+        return tuple(getattr(self, f.name)
+                     for f in dataclasses.fields(self))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,3 +99,106 @@ class Architecture:
             if self.level(i).name == name:
                 return i
         raise KeyError(name)
+
+    def canonical(self) -> tuple:
+        """Canonical post-init field tuples of the whole hierarchy —
+        what content caches key on instead of the dataclass instances,
+        so derived-default sentinels can never alias two distinct archs
+        or split two equal ones."""
+        return (self.name, tuple(lv.canonical() for lv in self.levels),
+                self.compute.canonical())
+
+
+# ----------------------------------------------------------------------
+# Architecture-as-data: the traced scalar inputs of a compiled program
+# ----------------------------------------------------------------------
+#: ``ArchParams.storage`` column order (per level, innermost-first rows)
+STORAGE_FIELDS = ("capacity_words", "bandwidth_words_per_cycle",
+                  "read_energy_pj", "write_energy_pj", "gated_energy_pj",
+                  "metadata_read_energy_pj")
+#: ``ArchParams.compute`` entry order
+COMPUTE_FIELDS = ("instances", "mac_energy_pj", "gated_energy_pj",
+                  "throughput")
+
+
+def arch_structure(arch: Architecture) -> tuple:
+    """The *static* part of an architecture — the level-name topology
+    (SAF specs resolve levels by name, so names shape the trace) and the
+    compute-unit name.  Every scalar (capacity, bandwidth, energies, PE
+    count) is traced :class:`ArchParams` data, so two designs with equal
+    structure share compiled programs whatever their provisioning."""
+    return (tuple(lv.name for lv in arch.levels), arch.compute.name)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchParams:
+    """Traced architecture inputs of one compiled program — the design
+    counterpart of ``batched.WorkloadParams``.
+
+    ``storage`` holds one row per storage level (INNERMOST-first, the
+    analyzers' indexing) with the :data:`STORAGE_FIELDS` columns;
+    ``compute`` is the :data:`COMPUTE_FIELDS` vector.  Both may carry a
+    leading candidate axis (``batched`` — see :meth:`stack`), in which
+    case candidate ``i`` of a population evaluates under design ``i``:
+    a mixed-design co-search population rides one compiled program.
+    ``structure`` records the :func:`arch_structure` the rows were
+    packed for, so binding them to a topologically different program is
+    a loud error."""
+
+    storage: np.ndarray
+    compute: np.ndarray
+    structure: tuple = ()
+
+    @property
+    def batched(self) -> bool:
+        """True when a leading per-candidate axis is present."""
+        return self.storage.ndim == 3
+
+    @property
+    def num_levels(self) -> int:
+        return self.storage.shape[-2]
+
+    def leaves(self) -> tuple:
+        """The pytree handed to the jitted program."""
+        return (self.storage, self.compute)
+
+    def take(self, idx) -> "ArchParams":
+        """Candidate-axis gather of a batched params object."""
+        if not self.batched:
+            raise ValueError("take() needs batched (per-candidate) "
+                             "arch params; see ArchParams.stack")
+        return ArchParams(storage=self.storage[idx],
+                          compute=self.compute[idx],
+                          structure=self.structure)
+
+    @staticmethod
+    def stack(params: "list[ArchParams]") -> "ArchParams":
+        """Stack per-design params into one batched (per-candidate)
+        object; all inputs must share the same topology."""
+        if not params:
+            raise ValueError("cannot stack zero ArchParams")
+        structure = params[0].structure
+        for p in params:
+            if p.batched:
+                raise ValueError("stack() takes unbatched ArchParams")
+            if p.structure != structure:
+                raise ValueError(
+                    f"cannot stack arch params of different topologies: "
+                    f"{p.structure} != {structure}")
+        return ArchParams(
+            storage=np.stack([p.storage for p in params]),
+            compute=np.stack([p.compute for p in params]),
+            structure=structure)
+
+
+def pack_arch_params(arch: Architecture) -> ArchParams:
+    """Lower a concrete architecture to the traced scalar arrays of its
+    compiled programs (rows innermost-first, matching ``arch.level``)."""
+    storage = np.asarray(
+        [[float(getattr(arch.level(s), f)) for f in STORAGE_FIELDS]
+         for s in range(arch.num_levels)], np.float64)
+    compute = np.asarray(
+        [float(getattr(arch.compute, f)) for f in COMPUTE_FIELDS],
+        np.float64)
+    return ArchParams(storage=storage, compute=compute,
+                      structure=arch_structure(arch))

@@ -61,6 +61,25 @@ layer of a network sweep, mixed density kinds included, evaluates
 through the same compiled program, making an N-layer sweep O(buckets)
 compiles instead of O(layers x buckets).
 
+Architecture-as-data (one compile per *topology x bucket shape*)
+----------------------------------------------------------------
+The symmetric move for design sweeps: every per-level architecture
+scalar — capacity, bandwidth, read/write/gated/metadata energies, MAC
+energy, PE count — packs into a fixed-shape traced
+:class:`~.arch.ArchParams` (``arch.pack_arch_params``) instead of baking
+into the trace.  Programs are keyed by arch *topology*
+(:func:`~.arch.arch_structure`: level names + compute name) plus the SAF
+structure, and the params ride as a PER-CANDIDATE (vmapped) input:
+``evaluate(..., arch_params=)`` binds one design to the whole population
+(the facade's own arch by default) or — with a batched params object —
+one design point per candidate, which is what lets a mixed-design
+(design, mapping) co-search population evaluate through ONE compiled
+program.  A design sweep therefore costs O(buckets) compiles,
+independent of the number of design points
+(``Sparseloop.evaluate_designs``); the sharded path replicates the
+workload params across devices and shards the arch rows with their
+candidates.
+
 ``BatchedModel.evaluate`` matches scalar ``Sparseloop.evaluate`` to
 float64 round-off (tests/test_batched.py pins <=1e-6 relative, and
 tests/test_bucketed.py pins the padded-bucket path against both); the
@@ -86,7 +105,6 @@ it.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import jax
 import jax.numpy as jnp
@@ -94,7 +112,8 @@ import numpy as np
 from jax.experimental import enable_x64
 
 from . import compile_stats
-from .arch import Architecture
+from .arch import (COMPUTE_FIELDS, STORAGE_FIELDS, ArchParams,
+                   Architecture, arch_structure, pack_arch_params)
 from .density import (ACTUAL_ID, BatchedDensityUnsupported, DensityCaps,
                       DensityModel, TracedDensityStats, caps_for_models,
                       make_density_model)
@@ -466,11 +485,12 @@ class _Breakdown:
 
 # ----------------------------------------------------------------------
 # Shared compiled-program registry.  A "program" is the expensive unit
-# (trace + XLA compile); it is keyed by (design, workload STRUCTURE,
-# caps, template-or-bucket, check_capacity) — never by rank bounds or
-# density values, which ride in as traced WorkloadParams.  Model facades
-# (BatchedModel / BucketedModel) bind a concrete workload's params to a
-# shared program.
+# (trace + XLA compile); it is keyed by (arch TOPOLOGY + SAF structure,
+# workload STRUCTURE, caps, template-or-bucket, check_capacity) — never
+# by rank bounds, density values, or architecture scalars, which ride
+# in as traced WorkloadParams / ArchParams.  Model facades
+# (BatchedModel / BucketedModel) bind a concrete (workload, design)'s
+# params to a shared program.
 # ----------------------------------------------------------------------
 @dataclasses.dataclass
 class _ProgramRecord:
@@ -496,8 +516,9 @@ class _ProgramRecord:
             from jax.sharding import PartitionSpec as P
 
             from ..runtime.compression import shard_map
-            # batch args shard their leading (candidate) axis; the
-            # workload params are replicated on every device
+            # batch args (bounds, rank ids, per-candidate arch rows)
+            # shard their leading (candidate) axis; the workload params
+            # are replicated on every device
             spec = P(mesh.axis_names[0])
             fn = jax.jit(shard_map(
                 jax.vmap(self.single, in_axes=(0, None)),
@@ -558,6 +579,10 @@ class _TracedNestModel:
         # to the structure-shared program at evaluation time
         self.workload_params = pack_workload_params(workload, caps)
         self.caps = self.workload_params.caps
+        # ... and its traced architecture inputs (capacities, bandwidths,
+        # energies, PE counts) — the per-design data bound the same way
+        self.arch_params = pack_arch_params(arch)
+        self.arch_key = arch_structure(arch)
         self._stats = TracedDensityStats(self.caps)
         self._prog: _ProgramRecord | None = None
         self.program_shared = False
@@ -570,18 +595,25 @@ class _TracedNestModel:
         bucket for BucketedModel).
 
         The record's traced closure is bound to a *detached* shallow
-        copy of this facade with the per-layer state stripped: the
-        trace only reads structural attributes (slot shape, rel masks,
-        stats, one-hot), so the cache must not pin this facade's
-        workload_params / histograms for the program's lifetime."""
+        copy of this facade with the per-layer/per-design state
+        stripped: the trace only reads structural attributes (slot
+        shape, rel masks, stats, one-hot), so the cache must not pin
+        this facade's workload_params / arch_params / histograms for
+        the program's lifetime."""
         import copy
-        key = (self.design.arch, _freeze(self.safs.formats),
+        # keyed by arch TOPOLOGY (level names — what the SAF specs and
+        # therefore the trace structure depend on), never by the arch's
+        # scalar provisioning: capacities / bandwidths / energies ride
+        # in as traced ArchParams, so a design sweep shares programs
+        key = (arch_structure(self.design.arch),
+               _freeze(self.safs.formats),
                self.safs.actions, workload_structure(self.workload),
                self.caps, self.check_capacity, token)
         rec = _PROGRAM_CACHE.get(key)
         if rec is None:
             host = copy.copy(self)
             host.workload_params = None      # drop the heavy arrays
+            host.arch_params = None
             host._prog = None
             rec = _ProgramRecord(
                 kind=self.kind, single=host._vmapped,
@@ -616,6 +648,37 @@ class _TracedNestModel:
                              "program's workload structure")
         return wp.device_leaves()
 
+    def _bind_arch(self, arch_params: ArchParams | None, n: int) -> tuple:
+        """Validate arch params against the program's topology and
+        broadcast them along the candidate axis: the traced program
+        takes one scalar row per candidate, so an unbatched params
+        object (one design for the whole population — the facade's own
+        arch by default) broadcasts, while a batched one binds one
+        design point per candidate (mixed-design co-search)."""
+        ap = arch_params or self.arch_params
+        if ap.structure and ap.structure != self.arch_key:
+            raise ValueError(
+                "arch_params were packed for a different architecture "
+                "topology (level names / compute) than this program's "
+                f"({ap.structure} != {self.arch_key}) — metrics would "
+                "be silently wrong")
+        S = self.arch.num_levels
+        if ap.storage.shape[-2:] != (S, len(STORAGE_FIELDS)):
+            raise ValueError(
+                f"arch_params storage shape {ap.storage.shape} does not "
+                f"match the program's {S} storage levels")
+        storage, comp = ap.leaves()
+        if ap.batched:
+            if len(storage) != n:
+                raise ValueError(
+                    f"batched arch_params carry {len(storage)} candidate "
+                    f"rows, population has {n}")
+        else:
+            storage = np.broadcast_to(storage, (n,) + storage.shape)
+            comp = np.broadcast_to(comp, (n,) + comp.shape)
+        return (np.asarray(storage, np.float64),
+                np.asarray(comp, np.float64))
+
     @staticmethod
     def _pad_to_multiple(arrs, n: int):
         """Pad the candidate axis of each array to a multiple of n by
@@ -632,18 +695,20 @@ class _TracedNestModel:
     # analyze_sparse / evaluate_microarch line by line; any change to the
     # scalar model must be reflected here (the parity suites pin it).
     # ------------------------------------------------------------------
-    def _single(self, b, oh, wp):
+    def _single(self, b, oh, wp, ap):
         wl = self.workload
         levels = self.slot_levels
         S = self.arch.num_levels
         R = len(self.ranks)
-        arch = self.arch
         rel_of = self._rel
         expanded = self.safs.expand_double_sided()
         zname = wl.output
 
         # traced workload data: rank bounds + per-tensor density params
         rb, mids, dparams, hists = wp
+        # traced architecture data: per-level scalar rows (STORAGE_FIELDS
+        # columns, innermost-first) + the compute vector (COMPUTE_FIELDS)
+        storage, comp = ap
         stats = self._stats
         tidx = self._tidx
 
@@ -1048,7 +1113,8 @@ class _TracedNestModel:
         energy = 0.0
         worst_cycles = 0.0
         for s in range(S):
-            lvl = arch.level(s)
+            cap, bw, e_read, e_write, e_gated, e_meta = (
+                storage[s, c] for c in range(len(STORAGE_FIELDS)))
             ra = rg = wa = wg = meta = occ = 0.0
             inst = 1.0
             for t in wl.tensors:
@@ -1060,21 +1126,23 @@ class _TracedNestModel:
                 wg = wg + st["fills"].gated + st["updates"].gated
                 meta = meta + st["meta_reads"] + st["meta_fills"]
                 occ = occ + st["occ_max"]
-            if self.check_capacity and not math.isinf(lvl.capacity_words):
-                valid = valid & (occ <= lvl.capacity_words)
+            if self.check_capacity:
+                # traced capacity: an infinite level passes trivially,
+                # matching the scalar engine's skip-inf-levels behavior
+                valid = valid & (occ <= cap)
             energy = energy + inst * (
-                ra * lvl.read_energy_pj + wa * lvl.write_energy_pj
-                + (rg + wg) * lvl.gated_energy_pj
-                + meta * lvl.metadata_read_energy_pj)
-            cyc = (ra + rg + wa + wg + meta) / lvl.bandwidth_words_per_cycle
+                ra * e_read + wa * e_write + (rg + wg) * e_gated
+                + meta * e_meta)
+            cyc = (ra + rg + wa + wg + meta) / bw
             worst_cycles = jnp.maximum(worst_cycles, cyc)
 
-        pe = arch.compute
-        n_inst = jnp.clip(total_spatial * 1.0, 1.0, float(pe.instances))
+        pe_inst, pe_mac_e, pe_gated_e, pe_throughput = (
+            comp[c] for c in range(len(COMPUTE_FIELDS)))
+        n_inst = jnp.clip(total_spatial * 1.0, 1.0, pe_inst)
         compute_cycles = ((compute_actual + compute_gated)
-                          / (n_inst * pe.throughput))
-        energy = energy + (compute_actual * pe.mac_energy_pj
-                           + compute_gated * pe.gated_energy_pj)
+                          / (n_inst * pe_throughput))
+        energy = energy + (compute_actual * pe_mac_e
+                           + compute_gated * pe_gated_e)
         cycles = jnp.maximum(worst_cycles, compute_cycles)
 
         return {
@@ -1119,21 +1187,26 @@ class BatchedModel(_TracedNestModel):
             dtype=bool).reshape(self.num_slots, len(self.ranks))
         self._init_program(("template", template))
 
-    def _vmapped(self, b, wp):
-        return self._single(b, self._onehot, wp)
+    def _vmapped(self, args, wp):
+        b, ap = args
+        return self._single(b, self._onehot, wp, ap)
 
     # ------------------------------------------------------------------
     def evaluate(self, bounds, mesh=None,
-                 workload_params: WorkloadParams | None = None
+                 workload_params: WorkloadParams | None = None,
+                 arch_params: ArchParams | None = None
                  ) -> dict[str, np.ndarray]:
         """bounds: (C, num_slots) -> dict of (C,) arrays.
 
         ``workload_params`` binds a different layer's traced inputs to
         the shared compiled program (defaults to this facade's own
-        workload).  With a ``jax.sharding.Mesh`` of > 1 devices, the
+        workload); ``arch_params`` binds a different design's scalars —
+        one design for the whole population, or (batched params) one
+        per candidate.  With a ``jax.sharding.Mesh`` of > 1 devices, the
         candidate axis is sharded across the mesh's (single) axis with
-        ``shard_map`` — each device vmaps its population slice; the
-        population is padded (by repeating the last candidate) to a
+        ``shard_map`` — each device vmaps its population slice (arch
+        rows shard with their candidates, workload params replicate);
+        the population is padded (by repeating the last candidate) to a
         multiple of the device count and the padding is stripped from
         the returned arrays.
         """
@@ -1144,19 +1217,24 @@ class BatchedModel(_TracedNestModel):
                 f"got {bounds.shape}")
         with enable_x64():
             wp = self._bind_params(workload_params)
+            storage, comp = self._bind_arch(arch_params, len(bounds))
             # count only after the params bound — a rejected population
             # must not inflate the counters the CI gates read
             compile_stats.record_batched_evals(len(bounds),
                                                shared=self.program_shared)
             if mesh is not None and mesh.size > 1:
-                (bounds,), C = self._pad_to_multiple([bounds], mesh.size)
+                (bounds, storage, comp), C = self._pad_to_multiple(
+                    [bounds, storage, comp], mesh.size)
                 self._prog.note_compile(
                     ("sharded", mesh.size, bounds.shape))
                 out = self._prog.sharded(mesh)(
-                    jnp.asarray(bounds, jnp.float64), wp)
+                    (jnp.asarray(bounds, jnp.float64),
+                     (jnp.asarray(storage), jnp.asarray(comp))), wp)
                 return {k: np.asarray(v)[:C] for k, v in out.items()}
             self._prog.note_compile(bounds.shape)
-            out = self._prog.fn(jnp.asarray(bounds, jnp.float64), wp)
+            out = self._prog.fn(
+                (jnp.asarray(bounds, jnp.float64),
+                 (jnp.asarray(storage), jnp.asarray(comp))), wp)
             return {k: np.asarray(v) for k, v in out.items()}
 
 
@@ -1192,19 +1270,24 @@ class BucketedModel(_TracedNestModel):
         self._init_program(("bucket", bucket))
 
     def _vmapped(self, args, wp):
-        b, ids = args
+        b, ids, ap = args
         oh = ids[:, None] == jnp.arange(len(self.ranks))
-        return self._single(b, oh, wp)
+        return self._single(b, oh, wp, ap)
 
     # ------------------------------------------------------------------
     def evaluate(self, bounds, rank_ids, mesh=None,
-                 workload_params: WorkloadParams | None = None
+                 workload_params: WorkloadParams | None = None,
+                 arch_params: ArchParams | None = None
                  ) -> dict[str, np.ndarray]:
         """(bounds, rank_ids): matching (C, num_slots) arrays -> dict of
         (C,) metric arrays.  ``workload_params`` binds a different
         layer's traced inputs to the shared compiled program (defaults
-        to this facade's own workload); ``mesh`` shards the candidate
-        axis exactly as in :meth:`BatchedModel.evaluate`."""
+        to this facade's own workload); ``arch_params`` binds a
+        different design's scalars — one design for the whole
+        population, or (batched params) one per candidate, so a
+        mixed-design co-search population rides this one program;
+        ``mesh`` shards the candidate axis exactly as in
+        :meth:`BatchedModel.evaluate`."""
         bounds = np.asarray(bounds)
         rank_ids = np.asarray(rank_ids)
         if bounds.ndim != 2 or bounds.shape[1] != self.num_slots:
@@ -1221,22 +1304,27 @@ class BucketedModel(_TracedNestModel):
                              f"{len(self.ranks)})")
         with enable_x64():
             wp = self._bind_params(workload_params)
+            storage, comp = self._bind_arch(arch_params, len(bounds))
             # count only after the params bound — a rejected population
             # must not inflate the counters the CI gates read
             compile_stats.record_batched_evals(len(bounds),
                                                shared=self.program_shared)
             if mesh is not None and mesh.size > 1:
-                (bounds, rank_ids), C = self._pad_to_multiple(
-                    [bounds, rank_ids], mesh.size)
+                (bounds, rank_ids, storage, comp), C = \
+                    self._pad_to_multiple(
+                        [bounds, rank_ids, storage, comp], mesh.size)
                 self._prog.note_compile(
                     ("sharded", mesh.size, bounds.shape))
                 out = self._prog.sharded(mesh)(
                     (jnp.asarray(bounds, jnp.float64),
-                     jnp.asarray(rank_ids, jnp.int64)), wp)
+                     jnp.asarray(rank_ids, jnp.int64),
+                     (jnp.asarray(storage), jnp.asarray(comp))), wp)
                 return {k: np.asarray(v)[:C] for k, v in out.items()}
             self._prog.note_compile(bounds.shape)
             out = self._prog.fn((jnp.asarray(bounds, jnp.float64),
-                                 jnp.asarray(rank_ids, jnp.int64)), wp)
+                                 jnp.asarray(rank_ids, jnp.int64),
+                                 (jnp.asarray(storage), jnp.asarray(comp))),
+                                wp)
             return {k: np.asarray(v) for k, v in out.items()}
 
 
@@ -1262,7 +1350,14 @@ def _freeze(x):
 
 def _cache_key(design, workload: Workload, shape_key,
                check_capacity: bool, caps):
-    return (design.arch, _freeze(design.safs.formats), design.safs.actions,
+    # the arch is keyed by its CANONICAL post-__post_init__ field tuples
+    # (Architecture.canonical), not the dataclass instances: the -1.0
+    # derived-default sentinels (write/metadata energies) resolve before
+    # keying, so two archs that agree after derivation alias and any
+    # real scalar difference (e.g. gated_energy_pj) never reuses a
+    # facade built for another design's defaults
+    return (design.arch.canonical(), _freeze(design.safs.formats),
+            design.safs.actions,
             workload.name, tuple(workload.rank_bounds.items()),
             workload.tensors, workload.output, _freeze(workload.densities),
             shape_key, check_capacity, caps)

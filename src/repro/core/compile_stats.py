@@ -87,6 +87,10 @@ class CompileStats:
 #: process-lifetime counters (never reset implicitly; see ``reset``)
 STATS = CompileStats()
 
+#: bumped by every ``reset()`` so an open ``track()`` block can tell
+#: that its "before" snapshot belongs to a discarded history
+_EPOCH = 0
+
 
 def record_program(kind: str) -> None:
     STATS.programs += 1
@@ -128,22 +132,35 @@ def reset() -> None:
     """Zero the process-lifetime counters.  Note the batched-model content
     caches are NOT cleared: a model compiled before the reset stays warm
     and re-use of it records no new compile — which is exactly the
-    "compiles caused by this sweep" semantics the CI gates want."""
-    global STATS
+    "compiles caused by this sweep" semantics the CI gates want.
+    (``batched.clear_caches()`` is the complementary hook that cold-
+    starts the caches so re-created programs count again.)"""
+    global _EPOCH
     fresh = CompileStats()
     STATS.__dict__.update(fresh.__dict__)
+    _EPOCH += 1
 
 
 @contextlib.contextmanager
 def track():
     """Context manager yielding a :class:`CompileStats` that, on exit,
     holds the *delta* accumulated inside the block (counters inside the
-    block are live — read them after exit for final values)."""
+    block are live — read them after exit for final values).
+
+    The snapshot subtraction is robust to a mid-block ``reset()`` (in
+    any ordering with ``batched.clear_caches()``): a reset discards the
+    "before" snapshot's history, so the delta becomes everything
+    recorded *since the reset* — counters can never double-count or go
+    negative because the baseline belonged to a zeroed epoch."""
     before = snapshot()
+    epoch = _EPOCH
     delta = CompileStats()
     try:
         yield delta
     finally:
-        after = snapshot() - before
+        # a mid-block reset() zeroed STATS: the pre-block baseline no
+        # longer describes any recorded activity, so the delta is the
+        # post-reset lifetime counters themselves
+        after = snapshot() if _EPOCH != epoch else snapshot() - before
         delta.__dict__.update(after.__dict__)
         delta.compiles_by_kind = dict(after.compiles_by_kind)

@@ -142,11 +142,23 @@ class Sparseloop:
         Returns per-candidate arrays aligned with the input order:
         cycles, energy_pj, edp, valid, compute_actual/gated/skipped.
         """
+        return self._grouped_eval(workload, nests, check_capacity,
+                                  bucketed, caps, [None])[0]
+
+    def _grouped_eval(self, workload: Workload, nests, check_capacity,
+                      bucketed, caps, arch_params_list
+                      ) -> list[dict[str, np.ndarray]]:
+        """Shared grouped dispatch of ``evaluate_batch`` /
+        ``evaluate_designs``: lower the population once per group, then
+        bind each entry of ``arch_params_list`` (None = the engine's
+        own design) to the group's compiled program.  Returns one
+        result dict per entry, each aligned with the input order."""
         from .batched import group_by_bucket, group_by_template, lower_nests
         nests = list(nests)
-        out: dict[str, np.ndarray] = {}
+        outs: list[dict[str, np.ndarray]] = [{}
+                                             for _ in arch_params_list]
 
-        def scatter(idxs, res):
+        def scatter(out, idxs, res):
             for k, v in res.items():
                 if k not in out:
                     out[k] = np.zeros(
@@ -160,16 +172,20 @@ class Sparseloop:
                                            check_capacity, caps=caps)
                 bounds = np.stack([template.bounds_of(nests[i])
                                    for i in idxs])
-                scatter(idxs, model.evaluate(bounds))
-            return out
+                for out, ap in zip(outs, arch_params_list):
+                    scatter(out, idxs,
+                            model.evaluate(bounds, arch_params=ap))
+            return outs
 
         ranks = tuple(workload.rank_bounds)
         for bucket, idxs in group_by_bucket(nests, ranks).items():
             model = self.bucketed_model(workload, bucket, check_capacity,
                                         caps=caps)
             bounds, ids, order = lower_nests(bucket, nests, idxs)
-            scatter(order, model.evaluate(bounds, ids))
-        return out
+            for out, ap in zip(outs, arch_params_list):
+                scatter(out, order,
+                        model.evaluate(bounds, ids, arch_params=ap))
+        return outs
 
     def evaluate_network(self, workloads: Sequence[Workload],
                          nests_per_workload,
@@ -198,6 +214,45 @@ class Sparseloop:
                                     check_capacity=check_capacity,
                                     bucketed=bucketed, caps=caps)
                 for wl, nests in zip(workloads, nests_per_workload)]
+
+    def evaluate_designs(self, archs, workload: Workload, nests,
+                         check_capacity: bool = True,
+                         bucketed: bool = True,
+                         caps=None) -> list[dict[str, np.ndarray]]:
+        """Cross-product design sweep: evaluate one candidate population
+        under every architecture in ``archs`` through *shared* compiled
+        programs.
+
+        Architecture scalars (capacities, bandwidths, per-action
+        energies, PE counts) are traced ``ArchParams`` inputs of the
+        programs, which are keyed by arch *topology* (level names) —
+        so the sweep compiles O(buckets) programs, independent of the
+        number of design points: each arch just binds its own params.
+        ``archs`` are ``Architecture``s — or ``Design``s carrying this
+        engine's exact SAF spec — whose topology matches this design's.
+        Returns one ``evaluate_batch``-shaped dict per arch, aligned
+        with ``archs``."""
+        from .arch import arch_structure, pack_arch_params
+        base = self.design
+        resolved = []
+        for a in archs:
+            if isinstance(a, Design):
+                if a.safs != base.safs:
+                    raise ValueError(
+                        f"design {a.name!r} carries a different SAF spec "
+                        f"than this engine's {base.name!r}; SAFs are "
+                        f"program structure — build a separate "
+                        f"Sparseloop for it")
+                a = a.arch
+            if arch_structure(a) != arch_structure(base.arch):
+                raise ValueError(
+                    f"architecture {a.name!r} has topology "
+                    f"{arch_structure(a)}, this engine's programs are "
+                    f"built for {arch_structure(base.arch)}")
+            resolved.append(a)
+        params = [pack_arch_params(a) for a in resolved]
+        return self._grouped_eval(workload, nests, check_capacity,
+                                  bucketed, caps, params)
 
     # ------------------------------------------------------------------
     def cphc(self, workload: Workload, nest: LoopNest,

@@ -65,6 +65,9 @@ class SearchResult:
     #: per-generation trajectory (repro.search.SearchLog) when the result
     #: came from a stochastic strategy; None for enumeration
     log: object | None = None
+    #: the winning Design when the search also proposed design points
+    #: ((design, mapping) co-search); None for mapping-only searches
+    best_design: object | None = None
 
     @property
     def cycles(self) -> float:
@@ -180,8 +183,11 @@ def search(design: Design, workload: Workload,
     ``repro.search`` Strategy instance instead runs stochastic search
     over the same mapspace slice at the same evaluation budget
     (``repro.search.run_search``); extra keyword arguments (``key=``,
-    ``generations=``, ``pop_size=``, ``mesh=``, ...) pass through, and
-    the returned result carries its trajectory in ``result.log``.
+    ``generations=``, ``pop_size=``, ``mesh=``,
+    ``design_space=`` — a ``repro.search.DesignSpace`` turns the run
+    into (design, mapping) co-search, winner in ``result.best_design``,
+    ...) pass through, and the returned result carries its trajectory
+    in ``result.log``.
 
     ``use_batched``: ``"auto"`` (default) dispatches to the batched JAX
     engine only when a slice is big enough to amortize the jit compile
@@ -370,13 +376,20 @@ def _rank_batched(model: Sparseloop, workload: Workload,
 def _validated_result(model: Sparseloop, workload: Workload,
                       nest_at: Callable[[int], LoopNest], edp, valid,
                       n_eval: int,
-                      check_capacity: bool = True) -> SearchResult:
+                      check_capacity: bool = True,
+                      model_at: "Callable[[int], Sparseloop] | None" = None
+                      ) -> SearchResult:
     """Materialize the winner of a batched ranking, *validated through
     the scalar oracle*: walk candidates best-EDP-first (stable order —
     matches the scalar loop's tie-breaking) and return the first one the
     reference model confirms valid.  Guards against batched/scalar drift
     leaking a mapping the reference model rejects; a scalar-rejected
-    candidate is dropped from the valid count."""
+    candidate is dropped from the valid count.
+
+    ``model_at`` supplies a per-candidate oracle for (design, mapping)
+    co-search rankings — each candidate is re-validated under ITS OWN
+    design, and the winning design rides out as
+    ``SearchResult.best_design``."""
     valid = np.asarray(valid, dtype=bool)
     n_valid = int(valid.sum())
     if n_valid == 0:
@@ -385,15 +398,18 @@ def _validated_result(model: Sparseloop, workload: Workload,
     order = np.argsort(np.where(valid, edp, np.inf), kind="stable")
     for idx in order[:n_valid]:
         nest = nest_at(int(idx))
+        m = model_at(int(idx)) if model_at is not None else model
         try:
-            best = model.evaluate(workload, nest,
-                                  check_capacity=check_capacity)
+            best = m.evaluate(workload, nest,
+                              check_capacity=check_capacity)
         except ValueError:
             n_valid -= 1
             continue
         if best.result.valid:
-            return SearchResult(best=best, best_nest=nest,
-                                evaluated=n_eval, valid=n_valid)
+            return SearchResult(
+                best=best, best_nest=nest, evaluated=n_eval,
+                valid=n_valid,
+                best_design=m.design if model_at is not None else None)
         n_valid -= 1
     return SearchResult(best=None, best_nest=None,
                         evaluated=n_eval, valid=0)

@@ -5,17 +5,22 @@ mapping fast" into "find good mappings fast" (ROADMAP follow-up;
 SparseMap, arXiv 2508.12906):
 
   * :mod:`encoding`   — flat genomes (prime-factor level assignment +
-    permutation indices) that always decode to valid divisor splits
+    permutation indices) that always decode to valid divisor splits,
+    plus the (design, mapping) co-search extension: ``DesignSpace``
+    provisioning knobs append design genes (``CoSearchEncoding``)
   * :mod:`strategies` — RandomSearch / HillClimb / SimulatedAnnealing /
     EvolutionStrategy, all driven by explicit ``jax.random`` keys
   * :mod:`runner`     — population evaluation through the batched engine,
-    sharded across devices with ``shard_map`` when available
+    sharded across devices with ``shard_map`` when available;
+    ``run_search(..., design_space=)`` co-searches (design, mapping)
+    jointly through one compiled program (arch scalars are traced data)
   * :mod:`log`        — JSON-serializable per-generation trajectory
 
 Entry points: :func:`run_search` here, or
 ``repro.core.mapper.search(..., strategy="es")``.
 """
-from .encoding import MapspaceEncoding, prime_factors
+from .encoding import (CoSearchEncoding, DesignSpace, MapspaceEncoding,
+                       prime_factors)
 from .log import GenerationRecord, SearchLog
 from .runner import (KNOWN_SEARCH_ENV, PopulationEvaluator, SearchConfig,
                      population_mesh, run_search, validate_search_env)
@@ -24,7 +29,8 @@ from .strategies import (STRATEGIES, EvolutionStrategy, HillClimb,
                          crossover, make_strategy, mutate)
 
 __all__ = [
-    "MapspaceEncoding", "prime_factors",
+    "CoSearchEncoding", "DesignSpace", "MapspaceEncoding",
+    "prime_factors",
     "GenerationRecord", "SearchLog",
     "KNOWN_SEARCH_ENV", "PopulationEvaluator", "SearchConfig",
     "population_mesh", "run_search", "validate_search_env",

@@ -19,6 +19,14 @@ Spatial loops are taken verbatim from the constraints (they describe the
 hardware fanout, not a search dimension), exactly as the enumerating
 mapper does.
 
+  * **design genes** (:class:`CoSearchEncoding` only) — one gene per
+    :class:`DesignSpace` knob (a per-storage-level capacity / bandwidth
+    step list), valued as an index into that knob's steps.  The genome
+    then describes a joint (design, mapping) point — Fig. 17 co-design
+    as a search dimension — and the design decodes to traced
+    :class:`~repro.core.arch.ArchParams` rows, so a mixed-design
+    population still evaluates through ONE compiled bucket program.
+
 Decoding has two forms.  ``decode_population`` produces
 ``(NestTemplate, bounds-row)`` pairs: genomes sharing permutation genes
 share a template.  ``decode_bucketed`` — the fast path — emits
@@ -32,13 +40,18 @@ program instead of one compile per loop order.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import itertools
 import math
+from typing import Mapping
 
 import numpy as np
 
+from ..core.arch import (Architecture, ArchParams, StorageLevel,
+                         pack_arch_params)
 from ..core.batched import NestTemplate, TemplateBucket
+from ..core.engine import Design
 from ..core.mapper import (MapspaceConstraints, constrained_order,
                            spatial_residual)
 from ..core.mapping import LoopNest
@@ -152,8 +165,13 @@ class MapspaceEncoding:
             out[:, blk] = np.where(cols[None, :] < cut[:, None],
                                    la[:, None], lb[:, None])
         if self.perm_levels:
-            out[:, self.num_factor_genes:] = np.asarray(jrandom.randint(
-                keys[-1], (n, len(self.perm_levels)), 0, len(self.perms)))
+            # explicit end index: subclasses may append further gene
+            # families (e.g. the CoSearchEncoding design segment)
+            out[:, self.num_factor_genes:
+                self.num_factor_genes + len(self.perm_levels)] = \
+                np.asarray(jrandom.randint(
+                    keys[-1], (n, len(self.perm_levels)), 0,
+                    len(self.perms)))
         return out
 
     # ------------------------------------------------------------------
@@ -201,7 +219,11 @@ class MapspaceEncoding:
         """Group a (n, G) population by template: list of
         ``(template, original-indices, bounds)`` triples."""
         g = self.repair(genomes)
-        perm = g[:, self.num_factor_genes:]
+        # slice ONLY the permutation genes: trailing gene families
+        # (the CoSearchEncoding design segment) must not fragment the
+        # template groups — the loop structure doesn't depend on them
+        perm = g[:, self.num_factor_genes:
+                 self.num_factor_genes + len(self.perm_levels)]
         groups: dict[tuple, list[int]] = {}
         for i, row in enumerate(perm):
             groups.setdefault(tuple(row.tolist()), []).append(i)
@@ -304,3 +326,228 @@ class MapspaceEncoding:
                 f" + {len(self.perm_levels)} permutation), "
                 f"~{self.mapspace_size:.3g} mappings, "
                 f"{math.prod(self.residual.values())} iteration points")
+
+
+# ----------------------------------------------------------------------
+# (design, mapping) co-search: the design side of the genome
+# ----------------------------------------------------------------------
+def _freeze_steps(steps) -> tuple:
+    """Canonicalize a {level_name: values} mapping (or pre-frozen pair
+    tuple) into ``((name, (float, ...)), ...)`` so DesignSpace stays a
+    hashable frozen dataclass."""
+    if isinstance(steps, Mapping):
+        items = steps.items()
+    else:
+        items = tuple(steps)
+    return tuple((str(name), tuple(float(v) for v in values))
+                 for name, values in items)
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignSpace:
+    """Architecture-provisioning search space: per-storage-level
+    candidate *steps* for capacity and bandwidth (plus arbitrary extra
+    ``StorageLevel`` scalar fields via ``extra_steps``).
+
+    Each (level, knob) entry contributes ONE design gene valued in
+    ``[0, len(steps))``; the spec carries no base design, so the same
+    space composes with any design whose level names match — decode
+    with :meth:`arch_of` / :meth:`design_of`.  The provisioned scalars
+    ride as traced ``ArchParams``, so sweeping or co-searching the
+    space never multiplies the compile count (programs are keyed by
+    topology, which every point of the space shares)."""
+
+    #: {level_name: (capacity_words choices...)}
+    capacity_steps: tuple = ()
+    #: {level_name: (bandwidth_words_per_cycle choices...)}
+    bandwidth_steps: tuple = ()
+    #: {(level_name, field_name): (choices...)} for any other
+    #: StorageLevel scalar (e.g. read_energy_pj) — heterogeneous
+    #: Flexagon-style design points beyond pure provisioning
+    extra_steps: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "capacity_steps",
+                           _freeze_steps(self.capacity_steps))
+        object.__setattr__(self, "bandwidth_steps",
+                           _freeze_steps(self.bandwidth_steps))
+        extra = self.extra_steps
+        if isinstance(extra, Mapping):
+            extra = extra.items()
+        object.__setattr__(self, "extra_steps", tuple(
+            ((str(lvl), str(field)), tuple(float(v) for v in values))
+            for (lvl, field), values in extra))
+        for field, lvl, steps in self.knobs:
+            if not steps:
+                raise ValueError(f"empty step list for {field} of "
+                                 f"level {lvl!r}")
+
+    @property
+    def knobs(self) -> tuple[tuple[str, str, tuple[float, ...]], ...]:
+        """(field_name, level_name, steps) per gene — capacity genes
+        first, then bandwidth, then extras (construction order)."""
+        return tuple(
+            [("capacity_words", n, s) for n, s in self.capacity_steps]
+            + [("bandwidth_words_per_cycle", n, s)
+               for n, s in self.bandwidth_steps]
+            + [(field, lvl, s)
+               for (lvl, field), s in self.extra_steps])
+
+    @property
+    def num_genes(self) -> int:
+        return len(self.knobs)
+
+    @property
+    def cardinality(self) -> np.ndarray:
+        return np.asarray([len(s) for _, _, s in self.knobs], np.int64)
+
+    @property
+    def size(self) -> int:
+        """Number of distinct design points."""
+        return int(np.prod(self.cardinality, initial=1))
+
+    def all_genes(self):
+        """Every design-gene row of the cross product, lexicographic."""
+        for combo in itertools.product(
+                *[range(len(s)) for _, _, s in self.knobs]):
+            yield np.asarray(combo, np.int64)
+
+    # ------------------------------------------------------------------
+    def arch_of(self, base: Architecture, genes) -> Architecture:
+        """Apply a design-gene row to a base architecture (level names
+        must all exist in it)."""
+        genes = np.asarray(genes, np.int64).reshape(-1)
+        if len(genes) != self.num_genes:
+            raise ValueError(f"expected {self.num_genes} design genes, "
+                             f"got {len(genes)}")
+        overrides: dict[str, dict[str, float]] = {}
+        names = {lv.name for lv in base.levels}
+        for g, (field, lvl, steps) in zip(genes, self.knobs):
+            if lvl not in names:
+                raise ValueError(f"DesignSpace level {lvl!r} not in "
+                                 f"architecture {base.name!r} "
+                                 f"({sorted(names)})")
+            overrides.setdefault(lvl, {})[field] = steps[int(g)]
+        levels = tuple(
+            self._replace_level(lv, overrides[lv.name])
+            if lv.name in overrides else lv for lv in base.levels)
+        return dataclasses.replace(base, levels=levels)
+
+    @staticmethod
+    def _replace_level(lv, ov: dict) -> "StorageLevel":
+        """``dataclasses.replace`` that keeps DERIVED defaults derived:
+        when ``read_energy_pj`` is stepped and the base level's write /
+        metadata energies still equal their documented derivations
+        (write = read, metadata = 0.25 x read) — i.e. they were
+        defaults, not explicit choices — they are re-derived from the
+        NEW read energy instead of staying frozen at the base value, so
+        a decoded design point matches a directly-constructed level
+        with the same provisioning.  Explicitly stepped fields always
+        win."""
+        if "read_energy_pj" in ov:
+            if ("write_energy_pj" not in ov
+                    and lv.write_energy_pj == lv.read_energy_pj):
+                ov = {**ov, "write_energy_pj": -1.0}
+            if ("metadata_read_energy_pj" not in ov
+                    and lv.metadata_read_energy_pj
+                    == 0.25 * lv.read_energy_pj):
+                ov = {**ov, "metadata_read_energy_pj": -1.0}
+        return dataclasses.replace(lv, **ov)
+
+    def design_of(self, base: Design, genes) -> Design:
+        """Apply a design-gene row to a base Design (same SAFs; the
+        name grows a gene-tuple suffix for log/bench readability)."""
+        genes = np.asarray(genes, np.int64).reshape(-1)
+        suffix = ".".join(str(int(g)) for g in genes)
+        return dataclasses.replace(
+            base, arch=self.arch_of(base.arch, genes),
+            name=f"{base.name or base.arch.name}@{suffix}")
+
+    def describe(self) -> str:
+        return (f"{self.num_genes} design genes, {self.size} design "
+                f"points: " + ", ".join(
+                    f"{lvl}.{field}x{len(s)}"
+                    for field, lvl, s in self.knobs))
+
+
+class CoSearchEncoding(MapspaceEncoding):
+    """Joint (design, mapping) genome: the mapping genes of
+    :class:`MapspaceEncoding` followed by one design gene per
+    :class:`DesignSpace` knob.
+
+    Everything the strategies touch (``cardinality``, ``gene_block`` —
+    each design gene is its own crossover block, so recombination can
+    exchange a provisioning decision wholesale — ``random_population``,
+    ``structured_population``, ``repair``) covers the design segment,
+    and the bucket-relative decode is unchanged: the mapping genes
+    lower exactly as before, while :meth:`arch_params_of` turns the
+    design genes into per-candidate traced ``ArchParams`` rows — so a
+    mixed-design population evaluates through the SAME single compiled
+    bucket program as a mapping-only one."""
+
+    def __init__(self, workload: Workload, num_levels: int,
+                 cons: MapspaceConstraints | None,
+                 space: DesignSpace, base: Design):
+        super().__init__(workload, num_levels, cons)
+        if space.num_genes == 0:
+            raise ValueError("DesignSpace has no knobs — use plain "
+                             "MapspaceEncoding for mapping-only search")
+        self.space = space
+        self.base_design = base
+        # fail fast on level-name mismatches (decode would raise later)
+        space.arch_of(base.arch, np.zeros(space.num_genes, np.int64))
+        self.num_map_genes = self.genome_size
+        self.genome_size += space.num_genes
+        self.cardinality = np.concatenate(
+            [self.cardinality, space.cardinality])
+        self.gene_block = np.concatenate(
+            [self.gene_block,
+             self.num_blocks + np.arange(space.num_genes)])
+        self.num_blocks += space.num_genes
+
+    # ------------------------------------------------------------------
+    def structured_population(self, key, n: int) -> np.ndarray:
+        """Block-structured mapping genes + uniform design genes (no
+        provisioning corner is a-priori better, so the design segment
+        starts diverse)."""
+        import jax.random as jrandom
+        k1, k2 = jrandom.split(key)
+        out = super().structured_population(k1, n)
+        out[:, self.num_map_genes:] = np.asarray(jrandom.randint(
+            k2, (n, self.space.num_genes), 0,
+            np.asarray(self.space.cardinality)), np.int64)
+        return out
+
+    # ------------------------------------------------------------------
+    def design_genes(self, genomes: np.ndarray) -> np.ndarray:
+        """(n, num_design_genes) repaired design segment."""
+        return self.repair(np.atleast_2d(np.asarray(genomes, np.int64))
+                           )[:, self.num_map_genes:]
+
+    def design_of(self, genome: np.ndarray) -> Design:
+        """Materialize one genome's concrete Design."""
+        return self.space.design_of(self.base_design,
+                                    self.design_genes(genome)[0])
+
+    def arch_params_of(self, genomes: np.ndarray) -> ArchParams:
+        """Batched (per-candidate) traced arch rows of a population —
+        each distinct design point packs once, then gathers."""
+        g = self.design_genes(genomes)
+        uniq, inverse = np.unique(g, axis=0, return_inverse=True)
+        inverse = np.asarray(inverse).reshape(-1)   # numpy 2.0 kept dims
+        packed = [pack_arch_params(
+            self.space.arch_of(self.base_design.arch, row))
+            for row in uniq]
+        return ArchParams(
+            storage=np.stack([p.storage for p in packed])[inverse],
+            compute=np.stack([p.compute for p in packed])[inverse],
+            structure=packed[0].structure)
+
+    # ------------------------------------------------------------------
+    @property
+    def mapspace_size(self) -> float:
+        return super().mapspace_size * float(self.space.size)
+
+    def describe(self) -> str:
+        return (super().describe() + f"; co-search x "
+                + self.space.describe())

@@ -36,6 +36,17 @@ The returned :class:`mapper.SearchResult` carries the winning mapping
 of the best genomes seen and walks it best-first through
 ``Sparseloop.evaluate`` until the reference model confirms validity, so
 batched/scalar drift can never leak a mapping the oracle rejects.
+
+(design, mapping) co-search (``run_search(..., design_space=)``): with a
+:class:`encoding.DesignSpace`, genomes grow a design segment (one gene
+per provisioning knob), the strategies propose joint points, and the
+evaluator decodes the design genes to per-candidate traced
+``repro.core.arch.ArchParams`` rows — a MIXED-DESIGN population still
+evaluates through one compiled bucket program, because architecture
+scalars are traced data and programs are keyed by topology.  The
+archive walk then validates each candidate under its own design, and
+the winner's design is returned as ``SearchResult.best_design`` —
+Fig. 17-style co-design at batched-search speed.
 """
 from __future__ import annotations
 
@@ -50,7 +61,7 @@ from ..core.batched import batched_supported
 from ..core.engine import Sparseloop
 from ..core.mapper import MapspaceConstraints, SearchResult, _validated_result
 from ..core.workload import Workload
-from .encoding import MapspaceEncoding
+from .encoding import CoSearchEncoding, DesignSpace, MapspaceEncoding
 from .log import GenerationRecord, SearchLog
 from .strategies import Strategy, make_strategy
 
@@ -185,6 +196,24 @@ class PopulationEvaluator:
         self.check_capacity = check_capacity
         self.config = config or SearchConfig()
         self.batched = batched_supported(design, workload)
+        #: (design, mapping) co-search: the genome carries design genes
+        #: that decode to per-candidate traced ArchParams rows, so a
+        #: mixed-design population STILL rides one compiled program
+        self.cosearch = isinstance(enc, CoSearchEncoding)
+        #: scalar-path oracle per distinct design-gene row (co-search
+        #: populations repeat a handful of design points; don't rebuild
+        #: a Design + engine per candidate per generation)
+        self._scalar_models: dict[bytes, Sparseloop] = {}
+
+    def _scalar_model(self, genome) -> Sparseloop:
+        if not self.cosearch:
+            return self.model
+        key = self.enc.design_genes(genome)[0].tobytes()
+        model = self._scalar_models.get(key)
+        if model is None:
+            model = Sparseloop(self.enc.design_of(genome))
+            self._scalar_models[key] = model
+        return model
 
     def __call__(self, genomes: np.ndarray) -> dict[str, np.ndarray]:
         n = len(genomes)
@@ -196,26 +225,33 @@ class PopulationEvaluator:
             bucket, bounds, ids = self.enc.decode_bucketed(genomes)
             bm = self.model.bucketed_model(
                 self.workload, bucket, check_capacity=self.check_capacity)
-            res = bm.evaluate(bounds, ids, mesh=self.mesh)
+            ap = (self.enc.arch_params_of(genomes)
+                  if self.cosearch else None)
+            res = bm.evaluate(bounds, ids, mesh=self.mesh, arch_params=ap)
             for k in METRICS:
                 out[k][:] = res[k]
             out["valid"][:] = res["valid"]
             return out
 
+        ap_all = (self.enc.arch_params_of(genomes)
+                  if self.cosearch and self.batched else None)
         for template, idx, bounds in self.enc.decode_population(genomes):
             if self.batched and len(idx) >= threshold:
                 bm = self.model.batched_model(
                     self.workload, template,
                     check_capacity=self.check_capacity)
-                res = bm.evaluate(bounds, mesh=self.mesh)
+                res = bm.evaluate(
+                    bounds, mesh=self.mesh,
+                    arch_params=ap_all.take(idx) if ap_all else None)
                 for k in METRICS:
                     out[k][idx] = res[k]
                 out["valid"][idx] = res["valid"]
             else:           # small group or scalar-only density model
                 compile_stats.record_scalar_evals(len(idx))
                 for i, b in zip(idx, bounds):
+                    model = self._scalar_model(genomes[i])
                     try:
-                        ev = self.model.evaluate(
+                        ev = model.evaluate(
                             self.workload, template.nest_with(b),
                             check_capacity=self.check_capacity)
                     except ValueError:
@@ -238,6 +274,7 @@ def run_search(design, workload: Workload,
                config: SearchConfig | None = None,
                batch_threshold: int | None = None,
                log_to: SearchLog | None = None,
+               design_space: DesignSpace | None = None,
                **strategy_options) -> SearchResult:
     """Stochastic mapspace search.  Returns a ``SearchResult`` whose
     ``log`` attribute holds the per-generation trajectory.
@@ -251,6 +288,14 @@ def run_search(design, workload: Workload,
     control placement.  ``config`` (a :class:`SearchConfig`) controls
     dispatch; ``batch_threshold`` is a convenience override of its field
     of the same name.
+
+    ``design_space`` (a :class:`DesignSpace`) turns the run into
+    (design, mapping) CO-SEARCH: genomes grow one gene per provisioning
+    knob, strategies propose joint points, mixed-design populations
+    evaluate through one compiled bucket program (per-candidate traced
+    ``ArchParams`` rows), and the returned result's winner — validated
+    by the scalar oracle *under its own design* — carries that design
+    in ``SearchResult.best_design``.
     """
     import jax.random as jrandom
 
@@ -258,7 +303,11 @@ def run_search(design, workload: Workload,
         raise ValueError(f"metric must be one of {METRICS}, got {metric!r}")
     cons = cons or MapspaceConstraints()
     strat = make_strategy(strategy, **strategy_options)
-    enc = MapspaceEncoding(workload, design.arch.num_levels, cons)
+    if design_space is not None:
+        enc: MapspaceEncoding = CoSearchEncoding(
+            workload, design.arch.num_levels, cons, design_space, design)
+    else:
+        enc = MapspaceEncoding(workload, design.arch.num_levels, cons)
     if mesh == "auto":
         mesh = population_mesh()
     config = config or SearchConfig()
@@ -323,14 +372,22 @@ def run_search(design, workload: Workload,
             best_fitness=best["fitness"], best_cycles=best["cycles"],
             best_energy_pj=best["energy_pj"], best_edp=best["edp"]))
 
-    # scalar-oracle validation of the winner (best-first archive walk)
+    # scalar-oracle validation of the winner (best-first archive walk);
+    # co-search candidates validate under THEIR OWN design, and the
+    # winner's design rides out on the result
     order = np.argsort(archive_fit, kind="stable")[:ARCHIVE_SIZE]
+    model_at = None
+    if design_space is not None:
+        # reuse the evaluator's per-design oracle cache: archive rows
+        # repeat a handful of design points
+        model_at = (lambda i:
+                    evaluate._scalar_model(archive_gen[order[i]]))
     result = _validated_result(
         evaluate.model, workload,
         lambda i: enc.nest_of(archive_gen[order[i]]),
         edp=np.asarray([archive_fit[k] for k in order]),
         valid=np.ones(len(order), dtype=bool),
-        n_eval=n_eval, check_capacity=check_capacity)
+        n_eval=n_eval, check_capacity=check_capacity, model_at=model_at)
     result.valid = n_valid
     result.log = log
     return result

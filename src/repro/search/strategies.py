@@ -18,6 +18,16 @@ different storage level; permutation genes reseat a level's loop order;
 factor-swap crossover exchanges whole per-rank factor blocks between
 parents (swapping a rank's entire tiling, the recombination move that
 respects divisor validity by construction).
+
+The kernels are encoding-agnostic: they read only ``cardinality``,
+``gene_block`` and the population constructors, so the (design,
+mapping) co-search genome (``encoding.CoSearchEncoding`` — mapping
+genes followed by one design gene per ``DesignSpace`` knob) works
+unchanged.  Every strategy then proposes JOINT (design, mapping) points:
+mutation resamples a provisioning decision the way it reseats a loop
+order, and each design gene is its own crossover block, so
+recombination can graft one parent's buffer sizing onto the other's
+tiling.
 """
 from __future__ import annotations
 

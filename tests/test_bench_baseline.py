@@ -1,0 +1,71 @@
+"""benchmarks.run --update-baseline merge semantics (bugfix pin).
+
+The filtered-run merge used to keep stale rows for renamed/removed
+benchmarks forever, silently shrinking what the --gate step compares;
+``merge_baseline`` now prunes them (with warnings) using per-row bench
+module provenance."""
+import warnings
+
+import pytest
+
+from benchmarks.run import check_regression, merge_baseline
+
+
+def _row(name, module=None, derived="cphc=100"):
+    row = {"name": name, "us_per_call": 1.0, "derived": derived}
+    if module is not None:
+        row["module"] = module
+    return row
+
+
+def test_merge_replaces_and_keeps_unrelated_rows():
+    baseline = [_row("a1", "mod_a"), _row("b1", "mod_b")]
+    fresh = [_row("a1", "mod_a", derived="cphc=200")]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # clean merge: no warnings
+        merged = merge_baseline(baseline, fresh, ran_modules={"mod_a"},
+                                known_modules={"mod_a", "mod_b"})
+    by_name = {r["name"]: r for r in merged}
+    assert by_name["a1"]["derived"] == "cphc=200"    # replaced
+    assert "b1" in by_name                           # untouched module
+
+
+def test_merge_prunes_renamed_row_of_rerun_module():
+    """A module that re-ran but no longer emits a row (renamed bench
+    row) must not leave the old name in the baseline."""
+    baseline = [_row("old_name", "mod_a"), _row("b1", "mod_b")]
+    fresh = [_row("new_name", "mod_a")]
+    with pytest.warns(UserWarning, match="old_name"):
+        merged = merge_baseline(baseline, fresh, ran_modules={"mod_a"},
+                                known_modules={"mod_a", "mod_b"})
+    names = {r["name"] for r in merged}
+    assert names == {"new_name", "b1"}
+
+
+def test_merge_prunes_rows_of_removed_module():
+    """A row whose module left the registry is stale even when that
+    module did not run this time."""
+    baseline = [_row("gone1", "mod_gone"), _row("b1", "mod_b")]
+    fresh = [_row("a1", "mod_a")]
+    with pytest.warns(UserWarning, match="mod_gone"):
+        merged = merge_baseline(baseline, fresh, ran_modules={"mod_a"},
+                                known_modules={"mod_a", "mod_b"})
+    assert {r["name"] for r in merged} == {"a1", "b1"}
+
+
+def test_merge_keeps_legacy_rows_with_warning():
+    """Pre-provenance rows survive (we cannot attribute them) but warn
+    so the operator regenerates a tagged baseline."""
+    baseline = [_row("legacy")]                      # no module field
+    fresh = [_row("a1", "mod_a")]
+    with pytest.warns(UserWarning, match="provenance"):
+        merged = merge_baseline(baseline, fresh, ran_modules={"mod_a"},
+                                known_modules={"mod_a"})
+    assert {r["name"] for r in merged} == {"legacy", "a1"}
+
+
+def test_gate_still_fails_on_empty_comparison():
+    """With pruning in place the no-shared-metrics guard still trips
+    when a rename slips through without a baseline refresh."""
+    msgs = check_regression([_row("new")], [_row("old")])
+    assert msgs and "compared nothing" in msgs[0]

@@ -402,6 +402,96 @@ def test_workload_params_caps_mismatch_raises():
         bm.evaluate(bounds, ids, workload_params=other)
 
 
+def test_program_cache_never_serves_stale_energies():
+    """Regression (cache-key audit): two designs differing ONLY in a
+    derived-default-adjacent scalar (gated_energy_pj) share one traced
+    program — arch scalars are traced ArchParams now — but each facade
+    binds its own params, so neither ever sees the other's energies."""
+    import dataclasses
+    from repro.core.batched import clear_caches
+    clear_caches()
+    lo = two_level_arch(buffer_kwords=64)
+    hi = dataclasses.replace(
+        lo, levels=(lo.levels[0],
+                    dataclasses.replace(lo.levels[1],
+                                        gated_energy_pj=50.0)))
+    assert lo.canonical() != hi.canonical()
+    d_lo, d_hi = bitmask_design(lo), bitmask_design(hi)
+    enc, pop = _population(WL, 2, CONS, 12, key=17)
+    bucket, bounds, ids = enc.decode_bucketed(pop)
+    with compile_stats.track() as st:
+        m_lo = get_bucketed_model(d_lo, WL, bucket, check_capacity=False)
+        m_hi = get_bucketed_model(d_hi, WL, bucket, check_capacity=False)
+        out_lo = m_lo.evaluate(bounds, ids)
+        out_hi = m_hi.evaluate(bounds, ids)
+    assert m_lo is not m_hi               # facades never alias
+    assert st.programs == 1               # ... but the program is shared
+    # gating in the bitmask design makes the energies genuinely differ
+    assert (out_hi["energy_pj"] > out_lo["energy_pj"]).all()
+    for out, d in ((out_lo, d_lo), (out_hi, d_hi)):
+        model = Sparseloop(d)
+        for i in (0, 5, 11):
+            ev = model.evaluate(WL, enc.nest_of(pop[i]),
+                                check_capacity=False)
+            assert out["energy_pj"][i] == pytest.approx(ev.energy_pj,
+                                                        rel=1e-6)
+
+
+def test_storage_level_canonical_resolves_sentinels():
+    """The -1.0 construction sentinels (write/metadata energy derived
+    from read energy) resolve before cache keying: a level built with
+    defaults and one built with the explicit derived values alias; any
+    real scalar difference never does."""
+    from repro.core.arch import StorageLevel
+    a = StorageLevel("Buf", 1024, 64, 6.0)
+    b = StorageLevel("Buf", 1024, 64, 6.0, write_energy_pj=6.0,
+                     metadata_read_energy_pj=1.5)
+    assert a.canonical() == b.canonical()
+    c = StorageLevel("Buf", 1024, 64, 6.0, gated_energy_pj=0.5)
+    assert a.canonical() != c.canonical()
+    arch_a = two_level_arch()
+    arch_b = two_level_arch()
+    assert arch_a.canonical() == arch_b.canonical()
+    # canonical-keyed facade cache: equal-after-derivation archs hit
+    enc, pop = _population(WL, 2, CONS, 4, key=19)
+    bucket, _, _ = enc.decode_bucketed(pop)
+    with compile_stats.track() as st:
+        m1 = get_bucketed_model(dense_design(arch_a), WL, bucket)
+        m2 = get_bucketed_model(dense_design(arch_b), WL, bucket)
+    assert m1 is m2 and st.cache_hits >= 1
+
+
+def test_track_robust_to_midblock_reset_and_clear():
+    """Satellite pin: compile_stats.track() snapshot-subtract survives a
+    mid-block reset() + clear_caches() in either order — the delta is
+    the post-reset activity, never negative, never double-counted."""
+    from repro.core.batched import clear_caches
+    wl = matmul(8, 8, 8, densities={"A": ("uniform", 0.5)})
+    design = dense_design(two_level_arch())
+    enc = MapspaceEncoding(wl, 2, MapspaceConstraints(seed=0))
+    pop = enc.random_population(jrandom.PRNGKey(2), 4)
+    bucket, bounds, ids = enc.decode_bucketed(pop)
+    clear_caches()
+    with compile_stats.track() as st:
+        get_bucketed_model(design, wl, bucket,
+                           check_capacity=False).evaluate(bounds, ids)
+        # discard history mid-block, in both orderings
+        compile_stats.reset()
+        clear_caches()
+        get_bucketed_model(design, wl, bucket,
+                           check_capacity=False).evaluate(bounds, ids)
+        clear_caches()
+        compile_stats.reset()
+        get_bucketed_model(design, wl, bucket,
+                           check_capacity=False).evaluate(bounds, ids)
+    # exactly the post-LAST-reset activity: one program, one compile,
+    # one population — no negative counters, no double-counting
+    assert st.programs == 1 and st.compiles == 1
+    assert st.batched_evals == len(pop)
+    assert all(v >= 0 for v in (st.programs, st.compiles, st.cache_hits,
+                                st.batched_evals, st.scalar_evals))
+
+
 def test_mapper_free_permutation_search_batched_vs_scalar():
     """Pin: the bucket-grouped enumeration dispatch finds the identical
     best-EDP mapping as the scalar loop on a FREE-permutation mapspace

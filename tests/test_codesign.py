@@ -1,0 +1,279 @@
+"""Architecture-as-data + (design, mapping) co-search.
+
+The contract under test: every per-level architecture scalar is a traced
+``ArchParams`` input of the compiled programs — a design sweep over a
+grid of provisioning points evaluates through ONE program per bucket
+(design-count-independent) and matches the scalar oracle <= 1e-6 for
+every design, mixed uniform + actual-data layers included — and the
+``DesignSpace``/``CoSearchEncoding`` co-search layer proposes joint
+(design, mapping) points that stay bit-reproducible from their key.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.random as jrandom
+
+from repro.core import Sparseloop, compile_stats, matmul
+from repro.core.arch import (ArchParams, arch_structure, pack_arch_params)
+from repro.core.engine import Design
+from repro.core.mapper import MapspaceConstraints
+from repro.core.presets import (coordinate_list_design, scnn_like,
+                                three_level_arch, two_level_arch)
+from repro.search import (CoSearchEncoding, DesignSpace, MapspaceEncoding,
+                          PopulationEvaluator, SearchConfig, run_search)
+
+M, K, N = 32, 24, 16
+CONS = MapspaceConstraints(budget=64, seed=0, spatial={1: {"n": 4}})
+
+
+def _workloads():
+    rng = np.random.default_rng(3)
+    return [
+        matmul(M, K, N, densities={"A": ("uniform", 0.3),
+                                   "B": ("uniform", 0.6)},
+               name="uniform-layer"),
+        matmul(M, K, N, densities={
+            "A": ("actual", (rng.random((M, K)) < 0.35).astype(float)),
+            "B": ("uniform", 0.5)}, name="actual-layer"),
+    ]
+
+
+def _space():
+    return DesignSpace(
+        capacity_steps={"Buffer": (2 * 1024, 8 * 1024, 64 * 1024)},
+        bandwidth_steps={"DRAM": (8.0, 32.0)},
+        extra_steps={("Buffer", "read_energy_pj"): (3.0, 6.0, 12.0)})
+
+
+# ----------------------------------------------------------------------
+# ArchParams / DesignSpace structure
+# ----------------------------------------------------------------------
+def test_design_space_decode():
+    base = two_level_arch()
+    space = _space()
+    assert space.num_genes == 3
+    assert space.cardinality.tolist() == [3, 2, 3]
+    genes = list(space.all_genes())
+    assert len(genes) == space.size == 18
+    arch = space.arch_of(base, [2, 0, 1])
+    buf = arch.levels[1]
+    assert buf.capacity_words == 64 * 1024
+    assert buf.read_energy_pj == 6.0
+    assert arch.levels[0].bandwidth_words_per_cycle == 8.0
+    # untouched fields survive, topology is invariant across the space
+    assert buf.name == "Buffer" and buf.gated_energy_pj == 0.05
+    assert arch_structure(arch) == arch_structure(base)
+    # stepping read energy re-derives the DERIVED defaults (write=read,
+    # metadata=0.25*read) exactly like direct construction would —
+    # decoded points never freeze another read energy's derivations
+    hot = space.arch_of(base, [0, 0, 2]).levels[1]
+    assert hot.read_energy_pj == 12.0
+    assert hot.write_energy_pj == 12.0
+    assert hot.metadata_read_energy_pj == 3.0
+    import dataclasses as _dc
+    explicit = _dc.replace(base.levels[1], write_energy_pj=1.0)
+    kept = DesignSpace(extra_steps={("Buffer", "read_energy_pj"):
+                                    (12.0,)})._replace_level(explicit, {
+                                        "read_energy_pj": 12.0})
+    assert kept.write_energy_pj == 1.0      # explicit choices survive
+
+
+def test_design_space_rejects_unknown_level_and_empty_steps():
+    with pytest.raises(ValueError, match="empty step"):
+        DesignSpace(capacity_steps={"Buffer": ()})
+    space = DesignSpace(capacity_steps={"NoSuchLevel": (1.0,)})
+    with pytest.raises(ValueError, match="NoSuchLevel"):
+        space.arch_of(two_level_arch(), [0])
+
+
+def test_arch_params_pack_stack_take():
+    arch = two_level_arch()
+    ap = pack_arch_params(arch)
+    assert not ap.batched and ap.num_levels == 2
+    # rows are innermost-first: row 0 is the Buffer, row 1 the DRAM
+    assert ap.storage[0, 0] == 64 * 1024
+    assert np.isinf(ap.storage[1, 0])
+    assert ap.compute.tolist() == [256.0, 1.0, 0.05, 1.0]
+    batched = ArchParams.stack([ap, ap, ap])
+    assert batched.batched and batched.storage.shape == (3, 2, 6)
+    taken = batched.take([0, 2])
+    assert taken.storage.shape == (2, 2, 6)
+    with pytest.raises(ValueError, match="batched"):
+        ap.take([0])
+
+
+# ----------------------------------------------------------------------
+# design sweeps: one program per bucket, scalar-oracle parity per design
+# ----------------------------------------------------------------------
+def test_design_grid_parity_shared_program():
+    """Every design of a provisioning grid (capacities x bandwidths x
+    energies) matches the scalar oracle <= 1e-6 through the SAME
+    compiled program, for a uniform AND an actual-data layer."""
+    from repro.core.batched import clear_caches, common_caps
+    clear_caches()
+    base = coordinate_list_design(two_level_arch())
+    model = Sparseloop(base)
+    space = _space()
+    archs = [space.arch_of(base.arch, g) for g in space.all_genes()]
+    layers = _workloads()
+    caps = common_caps(layers)
+    pops, nests = [], []
+    for i, wl in enumerate(layers):
+        enc = MapspaceEncoding(wl, 2, CONS)
+        pop = enc.random_population(jrandom.PRNGKey(10 + i), 6)
+        pops.append((enc, pop))
+        nests.append([enc.nest_of(g) for g in pop])
+    with compile_stats.track() as st:
+        outs = [model.evaluate_designs(archs, wl, ns, caps=caps)
+                for wl, ns in zip(layers, nests)]
+    assert st.programs == 1, st.as_dict()
+    assert st.compiles == 1, st.as_dict()
+    assert st.scalar_evals == 0
+    for wl, (enc, pop), per_design in zip(layers, pops, outs):
+        for j, arch in enumerate(archs):
+            oracle = Sparseloop(dataclasses.replace(base, arch=arch))
+            for i, g in enumerate(pop):
+                ev = oracle.evaluate(wl, enc.nest_of(g))
+                assert per_design[j]["valid"][i] == ev.result.valid
+                if not ev.result.valid:
+                    continue
+                assert per_design[j]["cycles"][i] == pytest.approx(
+                    ev.cycles, rel=1e-6)
+                assert per_design[j]["energy_pj"][i] == pytest.approx(
+                    ev.energy_pj, rel=1e-6)
+
+
+def test_evaluate_designs_rejects_mismatches():
+    base = coordinate_list_design(two_level_arch())
+    model = Sparseloop(base)
+    wl = _workloads()[0]
+    enc = MapspaceEncoding(wl, 2, CONS)
+    nests = [enc.nest_of(g)
+             for g in enc.random_population(jrandom.PRNGKey(0), 2)]
+    with pytest.raises(ValueError, match="topology"):
+        model.evaluate_designs([three_level_arch()], wl, nests)
+    other = coordinate_list_design(two_level_arch())
+    other = dataclasses.replace(
+        other, safs=dataclasses.replace(other.safs, actions=()))
+    with pytest.raises(ValueError, match="SAF"):
+        model.evaluate_designs([other], wl, nests)
+
+
+def test_arch_params_topology_mismatch_raises():
+    """Binding params packed for a different topology is a loud error,
+    not silently-wrong metrics."""
+    base = coordinate_list_design(two_level_arch())
+    wl = _workloads()[0]
+    enc = MapspaceEncoding(wl, 2, CONS)
+    pop = enc.random_population(jrandom.PRNGKey(1), 4)
+    bucket, bounds, ids = enc.decode_bucketed(pop)
+    bm = Sparseloop(base).bucketed_model(wl, bucket, check_capacity=False)
+    wrong = pack_arch_params(three_level_arch())
+    with pytest.raises(ValueError, match="topology"):
+        bm.evaluate(bounds, ids, arch_params=wrong)
+    short = pack_arch_params(two_level_arch())
+    with pytest.raises(ValueError, match="candidate rows"):
+        bm.evaluate(bounds, ids,
+                    arch_params=ArchParams.stack([short] * 3))
+
+
+# ----------------------------------------------------------------------
+# co-search: joint (design, mapping) genomes
+# ----------------------------------------------------------------------
+def test_cosearch_encoding_genome_layout():
+    base = coordinate_list_design(two_level_arch())
+    wl = _workloads()[0]
+    space = _space()
+    enc = CoSearchEncoding(wl, 2, CONS, space, base)
+    plain = MapspaceEncoding(wl, 2, CONS)
+    assert enc.genome_size == plain.genome_size + space.num_genes
+    assert enc.num_map_genes == plain.genome_size
+    assert enc.cardinality[-space.num_genes:].tolist() == \
+        space.cardinality.tolist()
+    # each design gene is its own crossover block
+    assert enc.num_blocks == plain.num_blocks + space.num_genes
+    pop = enc.random_population(jrandom.PRNGKey(0), 32)
+    assert (enc.repair(pop) == pop).all()
+    spop = enc.structured_population(jrandom.PRNGKey(1), 32)
+    assert (enc.repair(spop) == spop).all()
+    # the design segment actually varies (no all-zero structured corner)
+    assert len(np.unique(enc.design_genes(spop), axis=0)) > 1
+    # per-candidate arch rows match a per-genome scalar pack
+    ap = enc.arch_params_of(pop)
+    assert ap.batched and len(ap.storage) == len(pop)
+    for i in (0, 7, 31):
+        ref = pack_arch_params(enc.design_of(pop[i]).arch)
+        np.testing.assert_array_equal(ap.storage[i], ref.storage)
+        np.testing.assert_array_equal(ap.compute[i], ref.compute)
+    assert enc.mapspace_size == plain.mapspace_size * space.size
+
+
+def test_cosearch_three_way_dispatch_parity():
+    """Mixed-design populations produce identical metrics through the
+    bucketed route (per-candidate ArchParams rows, one program), the
+    per-template route, and the per-candidate scalar oracle."""
+    base = coordinate_list_design(two_level_arch())
+    wl = _workloads()[0]
+    enc = CoSearchEncoding(wl, 2, CONS, _space(), base)
+    pop = enc.random_population(jrandom.PRNGKey(5), 24)
+    # cap loop-order diversity so the per-template route stays cheap
+    pool = pop[:3, enc.num_factor_genes:enc.num_map_genes]
+    pop[:, enc.num_factor_genes:enc.num_map_genes] = \
+        pool[np.arange(len(pop)) % len(pool)]
+    routes = {}
+    with compile_stats.track() as st:
+        for label, cfg in [
+                ("bucketed", SearchConfig(batch_threshold=1,
+                                          bucketed=True)),
+                ("template", SearchConfig(batch_threshold=1,
+                                          bucketed=False)),
+                ("scalar", SearchConfig(batch_threshold=10 ** 18))]:
+            routes[label] = PopulationEvaluator(
+                base, wl, enc, config=cfg)(pop)
+    assert st.compiles_by_kind.get("bucket", 0) <= 1
+    assert st.scalar_evals == len(pop)
+    ref = routes["scalar"]
+    for label in ("bucketed", "template"):
+        got = routes[label]
+        np.testing.assert_array_equal(got["valid"], ref["valid"])
+        finite = np.isfinite(ref["edp"])
+        np.testing.assert_allclose(got["edp"][finite],
+                                   ref["edp"][finite], rtol=1e-6)
+
+
+def test_cosearch_same_key_identical_log():
+    """Co-search is bit-reproducible: same jax.random key => identical
+    SearchLog and identical winning (design, mapping) pair — and the
+    winner is re-validated by the scalar oracle under its own design."""
+    base = scnn_like(three_level_arch())
+    wl = matmul(64, 48, 32, densities={"A": ("uniform", 0.4),
+                                       "B": ("uniform", 0.6)})
+    cons = MapspaceConstraints(budget=96, seed=0, spatial={1: {"n": 8}})
+    space = DesignSpace(
+        capacity_steps={"GLB": (24 * 1024, 96 * 1024), "SPad": (128, 512)},
+        bandwidth_steps={"DRAM": (4.0, 16.0)})
+    runs = [run_search(base, wl, cons, strategy="es", key=7, pop_size=32,
+                       mesh=None, design_space=space) for _ in range(2)]
+    a, b = runs
+    assert a.log.to_json() == b.log.to_json()
+    assert a.best_nest == b.best_nest
+    assert a.best_design == b.best_design
+    assert a.best_design is not None
+    # oracle re-validation under the winner's own design
+    oracle = Sparseloop(a.best_design).evaluate(wl, a.best_nest)
+    assert oracle.result.valid
+    assert a.best.edp == pytest.approx(oracle.edp, rel=1e-9)
+
+
+def test_cosearch_via_mapper_search():
+    """mapper.search passes design_space through to the co-search
+    runner; the result carries best_design and a trajectory."""
+    from repro.core.mapper import search
+    base = coordinate_list_design(two_level_arch())
+    wl = _workloads()[0]
+    res = search(base, wl, CONS, strategy="es", key=2, pop_size=16,
+                 mesh=None, design_space=_space())
+    assert res.best is not None and res.best.result.valid
+    assert isinstance(res.best_design, Design)
+    assert res.log is not None and len(res.log.records) >= 1
