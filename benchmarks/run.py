@@ -138,7 +138,7 @@ def registry() -> list[tuple[str, object]]:
                    bench_fig1_formats, bench_fig11_scnn,
                    bench_fig12_eyerissv2, bench_fig13_dstc,
                    bench_fig15_16_stc_study, bench_fig17_codesign,
-                   bench_kernels, bench_search_convergence,
+                   bench_fleet, bench_kernels, bench_search_convergence,
                    bench_stc_exact, bench_table5_cphc,
                    bench_table7_compression, bench_vmapper)
 
@@ -157,6 +157,7 @@ def registry() -> list[tuple[str, object]]:
         ("bucketed_sweep", bench_bucketed_sweep),
         ("codesign_search", bench_codesign),
         ("kernels", bench_kernels),
+        ("fleet", bench_fleet),
     ]
 
 

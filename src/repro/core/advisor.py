@@ -2,12 +2,22 @@
 hardware target.
 
 For each weight matmul of an assigned LM architecture (per-device shard
-sizes under the production mesh), the advisor evaluates the TPU-v5e
+sizes under a data x model mesh), the advisor evaluates the TPU-v5e
 Sparseloop preset with and without N:M weight compression and reports
 where compression pays.  This is the paper's design-space-exploration
-loop (Sec. 7) pointed at the framework itself: on TPU the only SAF with a
-compute-side payoff is the *format* (DESIGN.md §3 — MXU cannot skip), so
-the advisor's decision boundary is exactly "is this matmul HBM-bound?".
+loop (Sec. 7) pointed at the framework itself: on TPU the only SAF with
+a compute-side payoff is the *format* (DESIGN.md §3 — MXU cannot skip),
+so the advisor's decision boundary is exactly "is this matmul
+HBM-bound?".
+
+The per-layer shapes come from ``repro.fleet.extract`` (the same
+parameter-exact walk the fleet sweep uses) and the evaluations run on
+the batched engine via ``repro.fleet.sweep``: identical layer shapes
+dedupe to one evaluation, and all shapes of all options lower onto
+O(#options) compiled programs — ``advise`` on a 48-layer config costs
+the same compiles as on a 2-layer one.  For the fleet-wide report
+(every config, prefill + decode, verdicts + EDP + crossover), use
+:func:`fleet_report` / ``repro.fleet.sweep.fleet_sweep``.
 
 The kernel that implements the advised config is kernels/nm_spmm.
 """
@@ -16,10 +26,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from .engine import Design, Sparseloop
 from .mapping import LoopNest, nest
-from .presets import dense_design, tpu_nm_design, tpu_v5e_arch
-from .workload import matmul
 
 
 def _div_floor(x: int, target: int) -> int:
@@ -39,7 +46,12 @@ def tpu_mapping(M: int, K: int, N: int, *, bm: int = 2048, bn: int = 2048,
     """Canonical HBM->VMEM->REG/MXU mapping: (bm x bn) output tile spread
     spatially across the MXU, k streamed temporally with in-array (REG)
     accumulation; a k-spatial factor models the systolic depth so small-M
-    decode matmuls still fill the array."""
+    decode matmuls still fill the array.
+
+    Unit-bound loops are kept deliberately: every (M, K, N) yields the
+    same 7-slot loop STRUCTURE, so all shapes fall into one padded-
+    template bucket and the whole fleet shares one compiled program per
+    design (the property the fleet-compile CI gate pins)."""
     bm = _div_floor(M, bm)
     bn = _div_floor(N, bn)
     bk = _div_floor(K, bk)
@@ -72,73 +84,75 @@ class LayerAdvice:
         return self.dense_cycles / self.best_cycles
 
 
-def _weight_matmuls(cfg, tokens_per_device: int, tp: int):
-    """(name, M, K, N) for the arch's main per-device weight matmuls."""
-    d = cfg.d_model
-    out = [("qkv_proj", tokens_per_device, d,
-            max(1, (cfg.q_dim + 2 * cfg.kv_dim) // tp))]
-    out.append(("o_proj", tokens_per_device, max(1, cfg.q_dim // tp), d))
-    if cfg.moe:
-        out.append(("expert_ffn_in", tokens_per_device * cfg.moe.top_k
-                    // max(1, cfg.moe.num_experts // tp or 1),
-                    d, cfg.moe.expert_d_ff))
-        out.append(("expert_ffn_out",
-                    tokens_per_device * cfg.moe.top_k
-                    // max(1, cfg.moe.num_experts // tp or 1),
-                    cfg.moe.expert_d_ff, d))
-    elif cfg.d_ff:
-        out.append(("ffn_in", tokens_per_device, d,
-                    max(1, cfg.d_ff // tp)))
-        out.append(("ffn_out", tokens_per_device,
-                    max(1, cfg.d_ff // tp), d))
-    return [(n, max(8, M), max(8, K), max(8, N)) for n, M, K, N in out]
-
-
 def advise(cfg, *, tokens_per_device: int = 4096, tp: int = 16,
            nm_options: tuple[tuple[int, int], ...] = ((2, 4), (2, 8)),
            weight_density_model: str = "structured") -> list[LayerAdvice]:
-    """Evaluate dense vs N:M-compressed weights for each weight matmul."""
-    advices = []
-    for name, M, K, N in _weight_matmuls(cfg, tokens_per_device, tp):
-        mapping = tpu_mapping(M, K, N)
-        wl_dense = matmul(M, K, N, name=name)
-        base = Sparseloop(dense_design(tpu_v5e_arch())).evaluate(
-            wl_dense, mapping, check_capacity=False)
-        best = ("dense", base.result.cycles, 1.0)
-        for (n, m) in nm_options:
-            wl = matmul(M, K, N, name=name, densities={
-                "A": ("structured", {"n": n, "m": m})})
-            # B is the weight in the kernel; in the Einsum convention here
-            # A is the (M,K) operand -> put the structure on B instead:
-            wl = matmul(M, K, N, name=name, densities={
-                "B": ("structured", {"n": n, "m": m})})
-            des = tpu_nm_design(n, m)
-            # compress the weight tensor B (the A-format entries of the
-            # preset target the first operand; remap to B)
-            fmts = {(lvl, "B"): f for (lvl, t), f in
-                    des.safs.formats.items()}
-            des = Design(arch=des.arch,
-                         safs=dataclasses.replace(des.safs, formats=fmts),
-                         name=des.name)
-            ev = Sparseloop(des).evaluate(wl, mapping,
+    """Evaluate dense vs N:M-compressed weights for each weight matmul.
+
+    Shapes are extracted by the fleet walk (so MoE experts, MLA
+    projections, SSM projections and the LM head all appear) and
+    sharded column/row-parallel over ``tp``; evaluation runs batched —
+    identical layers evaluate once, and compile count is bounded by the
+    option count regardless of depth."""
+    del weight_density_model  # structured N:M is the only model wired up
+    from repro.fleet.extract import (MeshSpec, extract_network,
+                                     shard_entries)
+    from repro.fleet.sweep import (WIN_MARGIN, _evaluate_shapes,
+                                   dedupe_shapes, default_options)
+    from . import compile_stats
+
+    mesh = MeshSpec((("data", 1), ("model", tp)))
+    net = shard_entries(
+        extract_network(cfg, "prefill", seq_len=tokens_per_device,
+                        batch=1), mesh)
+    entries = net.weight_matmuls()
+    options = default_options(tuple(nm_options))
+    unique, index = dedupe_shapes(entries)
+    compile_stats.record_dedup_evals(
+        (len(entries) - len(unique)) * len(options))
+    results = {opt.name: _evaluate_shapes(opt, unique,
                                           check_capacity=False)
-            if ev.result.cycles < best[1]:
-                best = (des.name, ev.result.cycles,
-                        ev.result.energy_pj / base.result.energy_pj)
+               for opt in options}
+
+    advices = []
+    for e, ui in zip(entries, index):
+        dense = results["dense"][ui]
+        mapping = tpu_mapping(*e.shape)
+        fanout = math.prod(lp.bound for lp in mapping.loops
+                           if lp.spatial)
+        compute_cycles = e.M * e.K * e.N / fanout
+        # the TPU preset's only sub-compute-bandwidth level is HBM, so a
+        # memory-bound matmul is HBM-bound by construction
+        bottleneck = ("compute"
+                      if dense["cycles"] <= compute_cycles * (1 + 1e-6)
+                      else "HBM")
+        best = ("dense", dense["cycles"], 1.0)
+        for opt in options[1:]:
+            r = results[opt.name][ui]
+            if r["cycles"] * WIN_MARGIN < best[1]:
+                best = (opt.name, r["cycles"],
+                        r["energy_pj"] / dense["energy_pj"])
         advices.append(LayerAdvice(
-            layer=name, M=M, K=K, N=N,
-            dense_cycles=base.result.cycles,
-            dense_bottleneck=base.result.bottleneck,
+            layer=e.name, M=e.M, K=e.K, N=e.N,
+            dense_cycles=dense["cycles"], dense_bottleneck=bottleneck,
             best_name=best[0], best_cycles=best[1],
             best_energy_ratio=best[2]))
     return advices
 
 
+def fleet_report(config_names=None, **kw):
+    """Fleet-wide advisor report: every config, prefill + decode,
+    per-layer verdicts, predicted EDP, compress-vs-dense crossover.
+    Thin alias for :func:`repro.fleet.sweep.fleet_sweep`."""
+    from repro.fleet.sweep import fleet_sweep
+    return fleet_sweep(config_names, **kw)
+
+
 def describe(advices: list[LayerAdvice]) -> str:
-    lines = [f"{'layer':>14} {'M':>7} {'K':>6} {'N':>6} "
+    lines = [f"{'layer':>20} {'M':>7} {'K':>6} {'N':>6} "
              f"{'bottleneck':>10} {'best':>14} {'speedup':>8}"]
     for a in advices:
-        lines.append(f"{a.layer:>14} {a.M:>7} {a.K:>6} {a.N:>6} "
+        lines.append(f"{a.layer:>20} {a.M:>7} {a.K:>6} {a.N:>6} "
                      f"{a.dense_bottleneck:>10} {a.best_name:>14} "
                      f"{a.speedup:>7.2f}x")
     return "\n".join(lines)

@@ -54,6 +54,11 @@ class CompileStats:
     shared_evals: int = 0
     #: candidates evaluated through the scalar fallback path
     scalar_evals: int = 0
+    #: evaluations AVOIDED by shape deduplication: a sweep that collapses
+    #: structurally-identical layer workloads (all N identical transformer
+    #: blocks of a config) evaluates the unique shape once and fans the
+    #: result back out; each fanned-out duplicate counts here
+    dedup_evals: int = 0
     #: per-kind compile breakdown, e.g. {"template": 3, "bucket": 1}
     compiles_by_kind: dict = dataclasses.field(default_factory=dict)
 
@@ -76,6 +81,7 @@ class CompileStats:
             batched_evals=self.batched_evals - other.batched_evals,
             shared_evals=self.shared_evals - other.shared_evals,
             scalar_evals=self.scalar_evals - other.scalar_evals,
+            dedup_evals=self.dedup_evals - other.dedup_evals,
             compiles_by_kind=by_kind)
 
     def copy(self) -> "CompileStats":
@@ -121,6 +127,10 @@ def record_batched_evals(n: int, shared: bool = False) -> None:
 
 def record_scalar_evals(n: int) -> None:
     STATS.scalar_evals += int(n)
+
+
+def record_dedup_evals(n: int) -> None:
+    STATS.dedup_evals += int(n)
 
 
 def snapshot() -> CompileStats:

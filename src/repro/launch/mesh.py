@@ -9,11 +9,22 @@ from __future__ import annotations
 import jax
 
 
+def production_mesh_shape(*, multi_pod: bool = False
+                          ) -> tuple[tuple[str, int], ...]:
+    """(axis, size) pairs of the production mesh, importable WITHOUT
+    touching jax device state — consumers that only need the topology
+    (the fleet workload extractor sizing per-device shards) use this
+    instead of materializing a device mesh."""
+    if multi_pod:
+        return (("pod", 2), ("data", 16), ("model", 16))
+    return (("data", 16), ("model", 16))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    axes_sizes = production_mesh_shape(multi_pod=multi_pod)
+    return jax.make_mesh(tuple(s for _, s in axes_sizes),
+                         tuple(a for a, _ in axes_sizes))
 
 
 def make_debug_mesh(devices: int | None = None):
