@@ -1,0 +1,194 @@
+"""Flight-recorder benchmarks + the two observability CI smokes.
+
+Three claims, two of them CI-gated:
+
+* **span overhead**: a disabled ``obs.span()`` is a near-no-op (sub-µs
+  per call — no allocation, no clock read), so instrumentation can stay
+  in the hot paths permanently;
+* **trace smoke** (``--trace-smoke``, CI): a reduced fleet sweep under
+  ``REPRO_TRACE=1`` emits a Perfetto-loadable ``trace.json`` that
+  passes the schema check (balanced spans, monotone timestamps) AND
+  whose per-program compile spans agree with ``compile_stats`` — span
+  count == ``compiles`` and summed span seconds == ``compile_seconds``;
+* **overhead smoke** (``--overhead-smoke``, CI): with tracing DISABLED,
+  the instrumentation's share of a warm sweep's wall-clock is < 5%
+  (measured: span-call cost x span count vs sweep seconds), and
+  enabling tracing doesn't blow the sweep up either.
+
+  python -m benchmarks.bench_obs                    # bench rows
+  python -m benchmarks.bench_obs --trace-smoke      # CI gate
+  python -m benchmarks.bench_obs --overhead-smoke   # CI gate
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro import obs
+from repro.core import compile_stats
+from repro.obs.export import validate_chrome_trace, write_chrome_trace
+
+from .common import emit
+
+TRACE_JSON = "trace.json"
+
+#: reduced fleet slice for the smokes: 2 configs, decode only — small
+#: enough for CI, big enough to compile real programs and dedupe shapes
+SWEEP_KW = dict(config_names=("qwen2-0.5b", "qwen3-4b"), reduced=True,
+                phases=("decode",))
+
+#: disabled instrumentation must stay below this share of sweep wall
+OVERHEAD_BUDGET = 0.05
+
+
+def _span_cost_s(calls: int = 200_000) -> float:
+    """Per-call seconds of ``obs.span()`` in the CURRENT tracer state."""
+    t0 = time.perf_counter()
+    for _ in range(calls):
+        with obs.span("bench.noop"):
+            pass
+    return (time.perf_counter() - t0) / calls
+
+
+def _counter_cost_s(calls: int = 200_000) -> float:
+    c = obs.metrics.counter("bench.noop_counter")
+    t0 = time.perf_counter()
+    for _ in range(calls):
+        c.add(1)
+    return (time.perf_counter() - t0) / calls
+
+
+def _sweep() -> tuple[object, float]:
+    from repro.fleet.sweep import fleet_sweep
+    t0 = time.perf_counter()
+    rep = fleet_sweep(**SWEEP_KW)
+    return rep, time.perf_counter() - t0
+
+
+def run() -> list[tuple[str, float, str]]:
+    # detach (don't flush/close) any caller-owned tracer — e.g. the
+    # chrome sink `benchmarks.run --trace` set up — so toggling tracing
+    # for the measurements below can't destroy it
+    from repro.obs import trace as _trace
+    saved = _trace._swap_state()
+    try:
+        off_s = _span_cost_s()            # disabled fast path
+        ctr_s = _counter_cost_s()
+        obs.enable()
+        on_s = _span_cost_s()
+
+        obs.enable()                      # fresh tracer: sweep spans only
+        from repro.core.batched import clear_caches
+        clear_caches()
+        with compile_stats.track() as st:
+            rep, wall = _sweep()
+        tr = obs.tracer()
+        n_spans = len(tr.spans)
+        compile_spans = tr.find("engine.compile")
+        obs.disable()
+    finally:
+        _trace._swap_state(saved)
+
+    rows = [
+        ("obs_span_overhead", off_s * 1e6,
+         f"disabled_ns={off_s * 1e9:.0f};enabled_ns={on_s * 1e9:.0f};"
+         f"counter_ns={ctr_s * 1e9:.0f}"),
+        ("obs_traced_sweep", wall * 1e6 / max(1, rep.total_entries),
+         f"spans={n_spans};compile_spans={len(compile_spans)};"
+         f"compiles={st.compiles};compile_s={st.compile_seconds:.2f};"
+         f"eval_s={st.eval_seconds:.3f};wall_s={wall:.2f}"),
+    ]
+    print(rep.summary())
+    return rows
+
+
+def trace_smoke() -> list[tuple[str, float, str]]:
+    """CI gate: REPRO_TRACE=1 fleet sweep -> schema-valid Perfetto
+    trace whose compile spans agree with compile_stats."""
+    os.environ[obs.TRACE_ENV] = "1"
+    obs.configure_from_env()
+    from repro.core.batched import clear_caches
+    clear_caches()
+
+    with compile_stats.track() as st:
+        rep, wall = _sweep()
+    print(rep.summary())
+
+    tr = obs.tracer()
+    compile_spans = tr.find("engine.compile")
+    assert len(compile_spans) == st.compiles, (
+        f"{len(compile_spans)} engine.compile spans but compile_stats "
+        f"counted {st.compiles} compiles — span emission and compile "
+        f"accounting diverged")
+    span_s = sum(s.dur for s in compile_spans)
+    assert abs(span_s - st.compile_seconds) <= \
+        0.05 * max(st.compile_seconds, 1e-9), (
+        f"compile spans sum to {span_s:.3f} s but compile_stats "
+        f"attributes {st.compile_seconds:.3f} s")
+    sweep_spans = tr.find("fleet.sweep")
+    assert len(sweep_spans) == 1 and \
+        sweep_spans[0].dur >= span_s - 1e-6, (
+        "fleet.sweep span missing or shorter than its compile spans")
+
+    path = write_chrome_trace(TRACE_JSON, tr.spans,
+                              obs.metrics.snapshot())
+    with open(path) as f:
+        errors = validate_chrome_trace(json.load(f))
+    assert not errors, "trace schema check failed:\n  " + \
+        "\n  ".join(errors)
+    n_events = len(tr.spans)
+    print(f"wrote {path}: {n_events} spans, schema OK, "
+          f"{len(compile_spans)} compile spans = {st.compiles} compiles "
+          f"({span_s:.2f} s of {wall:.2f} s wall)")
+
+    obs.disable()
+    del os.environ[obs.TRACE_ENV]
+    return [("obs_trace_smoke", 0.0,
+             f"spans={n_events};compiles={st.compiles};"
+             f"compile_s={st.compile_seconds:.2f};schema_errors=0")]
+
+
+def overhead_smoke() -> list[tuple[str, float, str]]:
+    """CI gate: disabled-tracer instrumentation costs < 5% of a warm
+    sweep's wall-clock."""
+    obs.disable()
+    os.environ.pop(obs.TRACE_ENV, None)
+    _sweep()                              # compile warm-up
+    _, dis_a = _sweep()
+    _, dis_b = _sweep()
+    t_disabled = min(dis_a, dis_b)
+
+    obs.enable()
+    _, t_enabled = _sweep()
+    n_spans = len(obs.tracer().spans)
+    obs.disable()
+
+    span_cost = _span_cost_s()
+    share = n_spans * span_cost / max(t_disabled, 1e-9)
+    ratio = t_enabled / max(t_disabled, 1e-9)
+    print(f"warm sweep: disabled {t_disabled:.2f} s, enabled "
+          f"{t_enabled:.2f} s ({ratio:.2f}x), {n_spans} spans @ "
+          f"{span_cost * 1e9:.0f} ns disabled "
+          f"-> {share * 100:.3f}% instrumentation share")
+    assert share < OVERHEAD_BUDGET, (
+        f"disabled-tracer instrumentation is {share * 100:.2f}% of the "
+        f"warm sweep wall-clock (budget {OVERHEAD_BUDGET * 100:.0f}%) — "
+        f"the span fast path regressed")
+    assert ratio < 2.0, (
+        f"enabling tracing made the warm sweep {ratio:.2f}x slower — "
+        f"span recording is too heavy for a flight recorder")
+    return [("obs_overhead_smoke", 0.0,
+             f"disabled_wall_s={t_disabled:.2f};"
+             f"enabled_wall_s={t_enabled:.2f};spans={n_spans};"
+             f"share_pct={share * 100:.3f}")]
+
+
+if __name__ == "__main__":
+    if "--trace-smoke" in sys.argv:
+        emit(trace_smoke())
+    elif "--overhead-smoke" in sys.argv:
+        emit(overhead_smoke())
+    else:
+        emit(run())

@@ -6,6 +6,13 @@ per-PR).
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig1 stc   # substring filter
+  PYTHONPATH=src python -m benchmarks.run --trace out.json fleet
+                                   # + Perfetto trace of the run
+
+Every row carries ``elapsed_s`` — the wall-clock its bench module took
+— and ``--trace PATH`` switches the flight recorder on for the run and
+writes a Chrome-trace/Perfetto ``trace.json`` (spans for every bench
+module plus the engine's compile/eval spans) at PATH.
 
 Regression gate (CI)
 --------------------
@@ -138,9 +145,10 @@ def registry() -> list[tuple[str, object]]:
                    bench_fig1_formats, bench_fig11_scnn,
                    bench_fig12_eyerissv2, bench_fig13_dstc,
                    bench_fig15_16_stc_study, bench_fig17_codesign,
-                   bench_fleet, bench_kernels, bench_search_convergence,
-                   bench_stc_exact, bench_table5_cphc,
-                   bench_table7_compression, bench_vmapper)
+                   bench_fleet, bench_kernels, bench_obs,
+                   bench_search_convergence, bench_stc_exact,
+                   bench_table5_cphc, bench_table7_compression,
+                   bench_vmapper)
 
     return [
         ("fig1_formats", bench_fig1_formats),
@@ -158,6 +166,7 @@ def registry() -> list[tuple[str, object]]:
         ("codesign_search", bench_codesign),
         ("kernels", bench_kernels),
         ("fleet", bench_fleet),
+        ("obs", bench_obs),
     ]
 
 
@@ -165,7 +174,13 @@ def run_benches(filters: list[str]
                 ) -> tuple[list[dict], list[str]]:
     """Run the (filtered) bench modules; returns (row_dicts,
     failed_names) and writes ``BENCH_results.json``.  Each row dict
-    carries ``module`` provenance (which registry entry emitted it)."""
+    carries ``module`` provenance (which registry entry emitted it) and
+    ``elapsed_s`` — its module's wall-clock — so the modeling-speed
+    story is itself a measured, archived artifact."""
+    import time
+
+    from repro import obs
+
     from .common import emit
 
     rows: list[dict] = []
@@ -174,14 +189,18 @@ def run_benches(filters: list[str]
         if filters and not any(f in name for f in filters):
             continue
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
-        try:
-            mod_rows = mod.run()
-        except Exception as e:  # noqa: BLE001
-            traceback.print_exc()
-            failed.append(name)
-            mod_rows = [(name, -1.0, f"FAILED:{type(e).__name__}")]
+        t0 = time.perf_counter()
+        with obs.span(f"bench.{name}"):
+            try:
+                mod_rows = mod.run()
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failed.append(name)
+                mod_rows = [(name, -1.0, f"FAILED:{type(e).__name__}")]
+        elapsed = time.perf_counter() - t0
         rows.extend({"name": rname, "us_per_call": us,
-                     "derived": derived, "module": name}
+                     "derived": derived, "module": name,
+                     "elapsed_s": round(elapsed, 3)}
                     for rname, us, derived in mod_rows)
     print(f"\n{'=' * 72}\n== CSV (name,us_per_call,derived)\n{'=' * 72}")
     emit([(r["name"], r["us_per_call"], r["derived"]) for r in rows])
@@ -266,18 +285,47 @@ def update_baseline(argv: list[str]) -> None:
     print(f"wrote {BASELINE_JSON}")
 
 
-def main() -> None:
-    if len(sys.argv) > 1 and sys.argv[1] == "--gate":
-        gate(sys.argv[2:])
-        return
-    if len(sys.argv) > 1 and sys.argv[1] == "--update-baseline":
-        update_baseline(sys.argv[2:])
-        return
+def _pop_trace_flag(argv: list[str]) -> str | None:
+    """Extract ``--trace PATH`` / ``--trace=PATH`` from argv (mutating
+    it); returns the path or None."""
+    for i, arg in enumerate(argv):
+        if arg == "--trace":
+            if i + 1 >= len(argv):
+                raise SystemExit("--trace requires a path argument")
+            path = argv[i + 1]
+            del argv[i:i + 2]
+            return path
+        if arg.startswith("--trace="):
+            path = arg.split("=", 1)[1]
+            del argv[i]
+            return path
+    return None
 
-    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
-    _, failed = run_benches(filters)
-    if failed:
-        raise SystemExit(f"benchmarks failed: {failed}")
+
+def main() -> None:
+    argv = sys.argv[1:]
+    trace_path = _pop_trace_flag(argv)
+    if trace_path:
+        from repro import obs
+        obs.enable(chrome=trace_path)
+        print(f"flight recorder on -> {trace_path}")
+    try:
+        if argv and argv[0] == "--gate":
+            gate(argv[1:])
+            return
+        if argv and argv[0] == "--update-baseline":
+            update_baseline(argv[1:])
+            return
+
+        filters = [a for a in argv if not a.startswith("-")]
+        _, failed = run_benches(filters)
+        if failed:
+            raise SystemExit(f"benchmarks failed: {failed}")
+    finally:
+        if trace_path:
+            from repro import obs
+            obs.disable()       # flushes the Chrome trace
+            print(f"wrote {trace_path}")
 
 
 if __name__ == "__main__":

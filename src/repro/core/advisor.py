@@ -95,24 +95,33 @@ def advise(cfg, *, tokens_per_device: int = 4096, tp: int = 16,
     identical layers evaluate once, and compile count is bounded by the
     option count regardless of depth."""
     del weight_density_model  # structured N:M is the only model wired up
+    from repro import obs
     from repro.fleet.extract import (MeshSpec, extract_network,
                                      shard_entries)
     from repro.fleet.sweep import (WIN_MARGIN, _evaluate_shapes,
                                    dedupe_shapes, default_options)
     from . import compile_stats
 
-    mesh = MeshSpec((("data", 1), ("model", tp)))
-    net = shard_entries(
-        extract_network(cfg, "prefill", seq_len=tokens_per_device,
-                        batch=1), mesh)
-    entries = net.weight_matmuls()
-    options = default_options(tuple(nm_options))
-    unique, index = dedupe_shapes(entries)
-    compile_stats.record_dedup_evals(
-        (len(entries) - len(unique)) * len(options))
-    results = {opt.name: _evaluate_shapes(opt, unique,
-                                          check_capacity=False)
-               for opt in options}
+    with obs.span("advisor.advise", config=cfg.name, tp=tp,
+                  phase="prefill") as sp:
+        mesh = MeshSpec((("data", 1), ("model", tp)))
+        net = shard_entries(
+            extract_network(cfg, "prefill", seq_len=tokens_per_device,
+                            batch=1), mesh)
+        entries = net.weight_matmuls()
+        options = default_options(tuple(nm_options))
+        unique, index = dedupe_shapes(entries)
+        compile_stats.record_dedup_evals(
+            (len(entries) - len(unique)) * len(options))
+        results = {}
+        for opt in options:
+            with obs.span("advisor.option", config=cfg.name,
+                          option=opt.name, phase="prefill",
+                          shapes=len(unique)):
+                results[opt.name] = _evaluate_shapes(
+                    opt, unique, check_capacity=False)
+        sp.set(layers=len(entries), unique_shapes=len(unique),
+               options=len(options))
 
     advices = []
     for e, ui in zip(entries, index):

@@ -105,12 +105,14 @@ it.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from .. import obs
 from . import compile_stats
 from .arch import (COMPUTE_FIELDS, STORAGE_FIELDS, ArchParams,
                    Architecture, arch_structure, pack_arch_params)
@@ -503,11 +505,15 @@ class _ProgramRecord:
     sharded_fns: dict = dataclasses.field(default_factory=dict)
     compiled: set = dataclasses.field(default_factory=set)
 
-    def note_compile(self, shape_key) -> None:
-        """First evaluation at a shape is when jit actually compiles."""
+    def note_compile(self, shape_key) -> bool:
+        """First evaluation at a shape is when jit actually compiles.
+        Returns True on that first sighting so the caller can attribute
+        the evaluation's wall-clock to compile (vs warm-eval) time."""
         if shape_key not in self.compiled:
             self.compiled.add(shape_key)
             compile_stats.record_compile(self.kind)
+            return True
+        return False
 
     def sharded(self, mesh):
         key = (tuple(d.id for d in mesh.devices.flat), mesh.axis_names)
@@ -611,13 +617,16 @@ class _TracedNestModel:
                self.caps, self.check_capacity, token)
         rec = _PROGRAM_CACHE.get(key)
         if rec is None:
-            host = copy.copy(self)
-            host.workload_params = None      # drop the heavy arrays
-            host.arch_params = None
-            host._prog = None
-            rec = _ProgramRecord(
-                kind=self.kind, single=host._vmapped,
-                fn=jax.jit(jax.vmap(host._vmapped, in_axes=(0, None))))
+            with obs.span("engine.program", kind=self.kind,
+                          workload=self.workload.name):
+                host = copy.copy(self)
+                host.workload_params = None  # drop the heavy arrays
+                host.arch_params = None
+                host._prog = None
+                rec = _ProgramRecord(
+                    kind=self.kind, single=host._vmapped,
+                    fn=jax.jit(jax.vmap(host._vmapped,
+                                        in_axes=(0, None))))
             compile_stats.record_program(self.kind)
             if len(_PROGRAM_CACHE) >= _PROGRAM_CACHE_CAP:
                 _PROGRAM_CACHE.pop(next(iter(_PROGRAM_CACHE)))
@@ -689,6 +698,32 @@ class _TracedNestModel:
             arrs = [np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
                     for a in arrs]
         return arrs, C
+
+    def _run(self, fn, batch_args, wp, shape_key,
+             n: int) -> dict[str, np.ndarray]:
+        """Invoke the compiled program and attribute its wall-clock.
+
+        The first (program, shape) sighting is when jit actually
+        compiles (``note_compile``), so that call's seconds are compile
+        time (``compile_stats.compile_seconds``, span ``engine.compile``)
+        while every later call at the shape is warm device time
+        (``eval_seconds``, span ``engine.eval``).  The ``np.asarray``
+        conversion blocks on the device result, so the measured interval
+        is host->device->host inclusive."""
+        is_new = self._prog.note_compile(shape_key)
+        name = "engine.compile" if is_new else "engine.eval"
+        t0 = time.perf_counter()
+        with obs.span(name, kind=self.kind,
+                      workload=self.workload.name, candidates=n,
+                      shape=shape_key):
+            out = fn(batch_args, wp)
+            out = {k: np.asarray(v) for k, v in out.items()}
+        dt = time.perf_counter() - t0
+        if is_new:
+            compile_stats.record_compile_seconds(dt)
+        else:
+            compile_stats.record_eval_seconds(dt)
+        return out
 
     # ------------------------------------------------------------------
     # The traced per-candidate program.  Mirrors analyze_dataflow /
@@ -1225,17 +1260,17 @@ class BatchedModel(_TracedNestModel):
             if mesh is not None and mesh.size > 1:
                 (bounds, storage, comp), C = self._pad_to_multiple(
                     [bounds, storage, comp], mesh.size)
-                self._prog.note_compile(
-                    ("sharded", mesh.size, bounds.shape))
-                out = self._prog.sharded(mesh)(
+                out = self._run(
+                    self._prog.sharded(mesh),
                     (jnp.asarray(bounds, jnp.float64),
-                     (jnp.asarray(storage), jnp.asarray(comp))), wp)
-                return {k: np.asarray(v)[:C] for k, v in out.items()}
-            self._prog.note_compile(bounds.shape)
-            out = self._prog.fn(
+                     (jnp.asarray(storage), jnp.asarray(comp))), wp,
+                    ("sharded", mesh.size, bounds.shape), C)
+                return {k: v[:C] for k, v in out.items()}
+            return self._run(
+                self._prog.fn,
                 (jnp.asarray(bounds, jnp.float64),
-                 (jnp.asarray(storage), jnp.asarray(comp))), wp)
-            return {k: np.asarray(v) for k, v in out.items()}
+                 (jnp.asarray(storage), jnp.asarray(comp))), wp,
+                bounds.shape, len(bounds))
 
 
 class BucketedModel(_TracedNestModel):
@@ -1313,19 +1348,19 @@ class BucketedModel(_TracedNestModel):
                 (bounds, rank_ids, storage, comp), C = \
                     self._pad_to_multiple(
                         [bounds, rank_ids, storage, comp], mesh.size)
-                self._prog.note_compile(
-                    ("sharded", mesh.size, bounds.shape))
-                out = self._prog.sharded(mesh)(
+                out = self._run(
+                    self._prog.sharded(mesh),
                     (jnp.asarray(bounds, jnp.float64),
                      jnp.asarray(rank_ids, jnp.int64),
-                     (jnp.asarray(storage), jnp.asarray(comp))), wp)
-                return {k: np.asarray(v)[:C] for k, v in out.items()}
-            self._prog.note_compile(bounds.shape)
-            out = self._prog.fn((jnp.asarray(bounds, jnp.float64),
-                                 jnp.asarray(rank_ids, jnp.int64),
-                                 (jnp.asarray(storage), jnp.asarray(comp))),
-                                wp)
-            return {k: np.asarray(v) for k, v in out.items()}
+                     (jnp.asarray(storage), jnp.asarray(comp))), wp,
+                    ("sharded", mesh.size, bounds.shape), C)
+                return {k: v[:C] for k, v in out.items()}
+            return self._run(
+                self._prog.fn,
+                (jnp.asarray(bounds, jnp.float64),
+                 jnp.asarray(rank_ids, jnp.int64),
+                 (jnp.asarray(storage), jnp.asarray(comp))), wp,
+                bounds.shape, len(bounds))
 
 
 # ----------------------------------------------------------------------

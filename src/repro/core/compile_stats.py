@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 
 
 @dataclasses.dataclass
@@ -59,6 +60,14 @@ class CompileStats:
     #: blocks of a config) evaluates the unique shape once and fans the
     #: result back out; each fanned-out duplicate counts here
     dedup_evals: int = 0
+    #: wall-clock seconds spent inside evaluations that triggered an XLA
+    #: compile (first (program, shape) sightings) — attributed by
+    #: core.batched at the call site, so "3 compiles took 41 s" is a
+    #: counter read, not a profiler run
+    compile_seconds: float = 0.0
+    #: wall-clock seconds spent inside warm (already-compiled) batched
+    #: evaluations, host->device->host inclusive
+    eval_seconds: float = 0.0
     #: per-kind compile breakdown, e.g. {"template": 3, "bucket": 1}
     compiles_by_kind: dict = dataclasses.field(default_factory=dict)
 
@@ -82,6 +91,8 @@ class CompileStats:
             shared_evals=self.shared_evals - other.shared_evals,
             scalar_evals=self.scalar_evals - other.scalar_evals,
             dedup_evals=self.dedup_evals - other.dedup_evals,
+            compile_seconds=self.compile_seconds - other.compile_seconds,
+            eval_seconds=self.eval_seconds - other.eval_seconds,
             compiles_by_kind=by_kind)
 
     def copy(self) -> "CompileStats":
@@ -97,45 +108,78 @@ STATS = CompileStats()
 #: that its "before" snapshot belongs to a discarded history
 _EPOCH = 0
 
+#: guards every STATS mutation, snapshot(), and reset()'s epoch bump —
+#: concurrent DSE clients (threads sharing the warm program cache)
+#: record through the same module globals
+_LOCK = threading.Lock()
+
 
 def record_program(kind: str) -> None:
-    STATS.programs += 1
+    with _LOCK:
+        STATS.programs += 1
     del kind
 
 
 def record_compile(kind: str) -> None:
-    STATS.compiles += 1
-    STATS.compiles_by_kind[kind] = STATS.compiles_by_kind.get(kind, 0) + 1
+    with _LOCK:
+        STATS.compiles += 1
+        STATS.compiles_by_kind[kind] = \
+            STATS.compiles_by_kind.get(kind, 0) + 1
 
 
 def record_cache_hit() -> None:
-    STATS.cache_hits += 1
+    with _LOCK:
+        STATS.cache_hits += 1
 
 
 def record_program_share(kind: str) -> None:
     """An existing traced program was rebound to a new model facade
     (a different workload's params will flow through it)."""
-    STATS.program_shares += 1
+    with _LOCK:
+        STATS.program_shares += 1
     del kind
 
 
 def record_batched_evals(n: int, shared: bool = False) -> None:
-    STATS.batched_evals += int(n)
-    if shared:
-        STATS.shared_evals += int(n)
+    with _LOCK:
+        STATS.batched_evals += int(n)
+        if shared:
+            STATS.shared_evals += int(n)
 
 
 def record_scalar_evals(n: int) -> None:
-    STATS.scalar_evals += int(n)
+    with _LOCK:
+        STATS.scalar_evals += int(n)
 
 
 def record_dedup_evals(n: int) -> None:
-    STATS.dedup_evals += int(n)
+    with _LOCK:
+        STATS.dedup_evals += int(n)
+
+
+def record_compile_seconds(seconds: float) -> None:
+    """Wall-clock of an evaluation that triggered an XLA compile."""
+    with _LOCK:
+        STATS.compile_seconds += float(seconds)
+
+
+def record_eval_seconds(seconds: float) -> None:
+    """Wall-clock of a warm (already-compiled) batched evaluation."""
+    with _LOCK:
+        STATS.eval_seconds += float(seconds)
 
 
 def snapshot() -> CompileStats:
     """Point-in-time copy of the process-lifetime counters."""
-    return STATS.copy()
+    with _LOCK:
+        return STATS.copy()
+
+
+def _snapshot_with_epoch() -> tuple[CompileStats, int]:
+    """Atomic (copy, epoch) pair: ``track`` must never pair a snapshot
+    with an epoch from the other side of a concurrent ``reset()``."""
+    with _LOCK:
+        return STATS.copy(), _EPOCH
 
 
 def reset() -> None:
@@ -147,8 +191,9 @@ def reset() -> None:
     starts the caches so re-created programs count again.)"""
     global _EPOCH
     fresh = CompileStats()
-    STATS.__dict__.update(fresh.__dict__)
-    _EPOCH += 1
+    with _LOCK:
+        STATS.__dict__.update(fresh.__dict__)
+        _EPOCH += 1
 
 
 @contextlib.contextmanager
@@ -162,8 +207,7 @@ def track():
     "before" snapshot's history, so the delta becomes everything
     recorded *since the reset* — counters can never double-count or go
     negative because the baseline belonged to a zeroed epoch."""
-    before = snapshot()
-    epoch = _EPOCH
+    before, epoch = _snapshot_with_epoch()
     delta = CompileStats()
     try:
         yield delta
@@ -171,6 +215,7 @@ def track():
         # a mid-block reset() zeroed STATS: the pre-block baseline no
         # longer describes any recorded activity, so the delta is the
         # post-reset lifetime counters themselves
-        after = snapshot() if _EPOCH != epoch else snapshot() - before
+        now, epoch_now = _snapshot_with_epoch()
+        after = now if epoch_now != epoch else now - before
         delta.__dict__.update(after.__dict__)
         delta.compiles_by_kind = dict(after.compiles_by_kind)

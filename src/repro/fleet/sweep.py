@@ -30,6 +30,7 @@ import dataclasses
 import json
 from typing import Sequence
 
+from repro import obs
 from repro.core import compile_stats
 from repro.core.advisor import tpu_mapping
 from repro.core.engine import Design, Sparseloop
@@ -198,8 +199,18 @@ class FleetReport:
     total_dense_computes: float = 0.0
     wall_seconds: float = 0.0
 
+    @property
+    def compile_seconds(self) -> float:
+        return float(self.stats.get("compile_seconds", 0.0))
+
+    @property
+    def eval_seconds(self) -> float:
+        return float(self.stats.get("eval_seconds", 0.0))
+
     def summary(self) -> str:
         wins = sum(1 for r in self.rows if r.verdict == "compress")
+        evals = (self.stats.get("batched_evals", 0)
+                 + self.stats.get("dedup_evals", 0))
         lines = [
             f"fleet sweep: {self.total_entries} layer entries "
             f"({self.unique_shapes} unique shapes) x "
@@ -209,6 +220,11 @@ class FleetReport:
             f"program shares {self.stats.get('program_shares', '?')}, "
             f"dedup-avoided evals {self.stats.get('dedup_evals', '?')}, "
             f"scalar evals {self.stats.get('scalar_evals', '?')}",
+            f"  wall {self.wall_seconds:.2f} s: "
+            f"{self.stats.get('compiles', 0)} compiles took "
+            f"{self.compile_seconds:.2f} s, {evals} evals "
+            f"({self.stats.get('dedup_evals', 0)} dedup'd) took "
+            f"{self.eval_seconds:.2f} s",
             f"  verdicts: {wins} compress / "
             f"{len(self.rows) - wins} dense",
         ]
@@ -271,23 +287,31 @@ def fleet_sweep(config_names=None, *, reduced: bool = False,
         raise ValueError("options[0] must be the dense baseline")
 
     t0 = time.perf_counter()
-    nets: list[NetworkWorkloads] = extract_fleet(
-        config_names, reduced=reduced, phases=phases, mesh=mesh,
-        seq_len=seq_len, batch=batch)
-    entries = [(net, e) for net in nets for e in net.matmuls
-               if include_attention or e.param_instances > 0]
-    flat = [e for _, e in entries]
-    bound = compile_bound(options, flat, check_capacity=check_capacity)
+    sweep_span = obs.span(
+        "fleet.sweep", configs=len(tuple(config_names)),
+        phases=list(phases), reduced=reduced)
+    with sweep_span as sw, compile_stats.track() as st:
+        with obs.span("fleet.extract", configs=len(tuple(config_names))):
+            nets: list[NetworkWorkloads] = extract_fleet(
+                config_names, reduced=reduced, phases=phases, mesh=mesh,
+                seq_len=seq_len, batch=batch)
+        entries = [(net, e) for net in nets for e in net.matmuls
+                   if include_attention or e.param_instances > 0]
+        flat = [e for _, e in entries]
+        bound = compile_bound(options, flat,
+                              check_capacity=check_capacity)
 
-    with compile_stats.track() as st:
         per_option: dict[str, tuple[list[dict], list[int]]] = {}
         for opt in options:
             pool_ix = [i for i, e in enumerate(flat)
                        if e.param_instances > 0 or not opt.weights_only]
             unique, index = dedupe_shapes([flat[i] for i in pool_ix])
             compile_stats.record_dedup_evals(len(pool_ix) - len(unique))
-            res = _evaluate_shapes(opt, unique,
-                                   check_capacity=check_capacity)
+            with obs.span("fleet.option", option=opt.name,
+                          phase="evaluate", shapes=len(unique),
+                          dedup=len(pool_ix) - len(unique)):
+                res = _evaluate_shapes(opt, unique,
+                                       check_capacity=check_capacity)
             fanned = {gi: res[index[j]]
                       for j, gi in enumerate(pool_ix)}
             per_option[opt.name] = fanned
@@ -320,9 +344,11 @@ def fleet_sweep(config_names=None, *, reduced: bool = False,
                           if e.param_instances > 0})
             grid = list(crossover_grid)
             shapes = [(m, K, N) for K, N in kns for m in grid]
-            by_opt = {opt.name: _evaluate_shapes(
-                opt, shapes, check_capacity=check_capacity)
-                for opt in options}
+            with obs.span("fleet.crossover", kn_shapes=len(kns),
+                          grid=len(grid)):
+                by_opt = {opt.name: _evaluate_shapes(
+                    opt, shapes, check_capacity=check_capacity)
+                    for opt in options}
             for ki, (K, N) in enumerate(kns):
                 here: dict = {}
                 for opt in options:
@@ -336,6 +362,10 @@ def fleet_sweep(config_names=None, *, reduced: bool = False,
                             last_win = m
                     here[opt.name] = last_win
                 cross[f"{K}x{N}"] = here
+
+        sw.set(entries=len(flat),
+               unique_shapes=len(dedupe_shapes(flat)[0]),
+               compile_bound=bound)
 
     total_computes = sum(e.M * e.K * e.N * e.count for e in flat)
     return FleetReport(

@@ -18,8 +18,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCH_NAMES, get_config
 from repro.models import get_api
+from repro.obs import metrics
 
 
 def _splice_cache(pool, single, slot: int):
@@ -64,12 +66,21 @@ def main(argv=None) -> dict:
                            size=(args.requests, args.prompt_len)
                            ).astype(np.int32)
 
+    # per-request latency (enqueue -> last generated token) lands in the
+    # serve.request_latency_s histogram; queue depth is a live gauge
+    lat = metrics.histogram("serve.request_latency_s")
+    depth = metrics.gauge("serve.queue_depth")
+    tokens = metrics.counter("serve.tokens")
+
     # initial wave fills all slots
     t0 = time.perf_counter()
     queue = list(range(args.requests))
     active = queue[:B]
     queue = queue[B:]
-    logits, cache = prefill(params, jnp.asarray(prompts[active]))
+    depth.set(len(queue))
+    with obs.span("serve.prefill", requests=len(active)):
+        logits, cache = prefill(params, jnp.asarray(prompts[active]))
+        logits.block_until_ready()
     tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
     slot_req = list(active)
     slot_len = [0] * B
@@ -79,9 +90,11 @@ def main(argv=None) -> dict:
     outputs: dict[int, list[int]] = {r: [] for r in range(args.requests)}
     done = 0
     total_decode = 0
+    latencies: list[float] = []
 
     while done < args.requests and (pos < S_max - 1).any():
-        logits, cache = decode(params, cache, tok, jnp.asarray(pos))
+        with obs.span("serve.decode_step", step=total_decode):
+            logits, cache = decode(params, cache, tok, jnp.asarray(pos))
         total_decode += 1
         if args.temperature > 0:
             key, sub = jax.random.split(key)
@@ -98,13 +111,20 @@ def main(argv=None) -> dict:
             if r is None:
                 continue
             outputs[r].append(int(nxt[b]))
+            tokens.add(1)
             slot_len[b] += 1
             if slot_len[b] >= args.gen:
                 done += 1
+                lat_s = time.perf_counter() - t0
+                lat.observe(lat_s)
+                latencies.append(lat_s)
                 if queue:   # continuous batching: refill the slot
                     r2 = queue.pop(0)
-                    lg, c1 = prefill(params,
-                                     jnp.asarray(prompts[r2:r2 + 1]))
+                    depth.set(len(queue))
+                    with obs.span("serve.prefill", requests=1,
+                                  refill=True, slot=b):
+                        lg, c1 = prefill(params,
+                                         jnp.asarray(prompts[r2:r2 + 1]))
                     cache = _splice_cache(cache, c1, b)
                     tok_np[b] = int(np.argmax(np.asarray(lg)[0, -1]))
                     slot_req[b] = r2
@@ -116,9 +136,20 @@ def main(argv=None) -> dict:
 
     dt = time.perf_counter() - t0
     tput = sum(len(v) for v in outputs.values()) / dt
+    lat_summary = {
+        "count": len(latencies),
+        "mean_s": (sum(latencies) / len(latencies)) if latencies else 0.0,
+        "max_s": max(latencies, default=0.0),
+        "p50_s": lat.percentile(50),
+        "p99_s": lat.percentile(99),
+    }
     print(f"[serve] {args.requests} requests, {total_decode} decode steps,"
-          f" {tput:.1f} tok/s (CPU reduced config)")
-    return {"outputs": outputs, "tokens_per_s": tput}
+          f" {tput:.1f} tok/s (CPU reduced config); "
+          f"latency mean {lat_summary['mean_s'] * 1e3:.0f} ms "
+          f"p99<={lat_summary['p99_s'] * 1e3:.0f} ms, "
+          f"peak queue depth {depth.max:.0f}")
+    return {"outputs": outputs, "tokens_per_s": tput,
+            "latency_s": lat_summary}
 
 
 if __name__ == "__main__":

@@ -52,10 +52,12 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 import warnings
 
 import numpy as np
 
+from .. import obs
 from ..core import compile_stats
 from ..core.batched import batched_supported
 from ..core.engine import Sparseloop
@@ -340,37 +342,57 @@ def run_search(design, workload: Workload,
             "edp": np.inf}
     n_eval = n_valid = 0
 
-    for gen in range(generations):
-        genomes = enc.repair(strat.ask(state, enc))
-        res = evaluate(genomes)
-        fitness = np.where(res["valid"], res[metric], np.inf)
-        strat.tell(state, enc, genomes, fitness)
+    t_run0 = time.perf_counter()
+    with compile_stats.track() as st, \
+            obs.span("search.run", strategy=strat.name, metric=metric,
+                     workload=workload.name, generations=generations,
+                     pop_size=strat.pop_size):
+        for gen in range(generations):
+            t_gen0 = time.perf_counter()
+            with obs.span("search.generation", generation=gen) as sp:
+                genomes = enc.repair(strat.ask(state, enc))
+                res = evaluate(genomes)
+                fitness = np.where(res["valid"], res[metric], np.inf)
+                strat.tell(state, enc, genomes, fitness)
 
-        n_eval += len(genomes)
-        n_valid += int(res["valid"].sum())
-        i = int(np.argmin(fitness))
-        if fitness[i] < best["fitness"]:
-            best = {"fitness": float(fitness[i]),
-                    "cycles": float(res["cycles"][i]),
-                    "energy_pj": float(res["energy_pj"][i]),
-                    "edp": float(res["edp"][i])}
-        for j in np.argsort(fitness, kind="stable")[:ARCHIVE_SIZE]:
-            if not np.isfinite(fitness[j]):
-                break
-            b = genomes[j].tobytes()
-            if b not in seen:
-                seen.add(b)
-                archive_fit.append(float(fitness[j]))
-                archive_gen.append(genomes[j].copy())
-        if len(archive_fit) > 4 * ARCHIVE_SIZE:   # keep the walk short
-            order = np.argsort(archive_fit, kind="stable")[:ARCHIVE_SIZE]
-            archive_fit = [archive_fit[k] for k in order]
-            archive_gen = [archive_gen[k] for k in order]
+                n_eval += len(genomes)
+                n_valid += int(res["valid"].sum())
+                i = int(np.argmin(fitness))
+                if fitness[i] < best["fitness"]:
+                    best = {"fitness": float(fitness[i]),
+                            "cycles": float(res["cycles"][i]),
+                            "energy_pj": float(res["energy_pj"][i]),
+                            "edp": float(res["edp"][i])}
+                for j in np.argsort(fitness,
+                                    kind="stable")[:ARCHIVE_SIZE]:
+                    if not np.isfinite(fitness[j]):
+                        break
+                    b = genomes[j].tobytes()
+                    if b not in seen:
+                        seen.add(b)
+                        archive_fit.append(float(fitness[j]))
+                        archive_gen.append(genomes[j].copy())
+                if len(archive_fit) > 4 * ARCHIVE_SIZE:
+                    order = np.argsort(archive_fit,
+                                       kind="stable")[:ARCHIVE_SIZE]
+                    archive_fit = [archive_fit[k] for k in order]
+                    archive_gen = [archive_gen[k] for k in order]
+                sp.set(evaluations=len(genomes),
+                       best_fitness=best["fitness"])
 
-        log.append(GenerationRecord(
-            generation=gen, evaluations=n_eval, valid=n_valid,
-            best_fitness=best["fitness"], best_cycles=best["cycles"],
-            best_energy_pj=best["energy_pj"], best_edp=best["edp"]))
+            log.append(GenerationRecord(
+                generation=gen, evaluations=n_eval, valid=n_valid,
+                best_fitness=best["fitness"], best_cycles=best["cycles"],
+                best_energy_pj=best["energy_pj"], best_edp=best["edp"],
+                wall_time_s=time.perf_counter() - t_gen0))
+    # run-level wall-clock attribution: where the search's seconds went
+    # (compile vs warm-eval, from compile_stats' seconds counters)
+    log.timing = {
+        "wall_s": time.perf_counter() - t_run0,
+        "compile_s": st.compile_seconds,
+        "eval_s": st.eval_seconds,
+        "compiles": st.compiles,
+    }
 
     # scalar-oracle validation of the winner (best-first archive walk);
     # co-search candidates validate under THEIR OWN design, and the

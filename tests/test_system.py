@@ -46,6 +46,11 @@ def test_serve_continuous_batching():
     lens = [len(v) for v in out["outputs"].values()]
     assert sorted(lens, reverse=True)[:4] == [6, 6, 6, 6]
     assert sum(lens) >= 5 * 6 - 6  # last slot may hit the cache limit
+    # flight-recorder metrics: per-request latency summary is populated
+    lat = out["latency_s"]
+    assert lat["count"] >= 4
+    assert 0 < lat["mean_s"] <= lat["max_s"] <= lat["p99_s"] * 2 + 1e-9
+    assert lat["p50_s"] > 0
 
 
 def test_dryrun_cell_compiles_small_mesh():
