@@ -1,0 +1,195 @@
+"""DSE-as-a-service throughput benchmark (beyond-paper: the batched
+engine as a persistent multi-tenant service).
+
+The claim being pinned: one warm :class:`repro.dse.EvaluationService`
+serving N concurrent island searches beats N isolated search processes,
+because the service amortizes XLA compiles (and the device mesh) across
+*clients* the way ``launch/serve.py`` amortizes a model across requests.
+
+CI gate (``--service-smoke``):
+
+* **Shared programs** — 4 concurrent island clients through ONE
+  in-process service must compile at most ``bucket count`` programs
+  TOTAL (the free-permutation encoding lowers every island's every
+  generation onto one ``TemplateBucket``, and the service's fixed
+  ``batch_slots`` keep every coalesced invocation on one jit shape), not
+  ``clients x buckets``.
+* **Oracle winners** — every island's returned winner re-evaluates
+  through a fresh scalar ``Sparseloop`` to <= 1e-6 relative EDP.
+* **Throughput** — candidates/sec of the 4-client service run must not
+  lose to the 4-isolated-runners baseline (each isolated runner pays
+  its own cold compile, exactly as 4 separate processes would).
+
+  python -m benchmarks.bench_service                   # full rows
+  python -m benchmarks.bench_service --service-smoke   # CI gate
+
+Both entry points write ``BENCH_service.json`` (uploaded as a CI
+artifact) with the service/baseline accounting and per-island winners.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from repro.core import compile_stats, matmul
+from repro.core.batched import clear_caches
+from repro.core.engine import Sparseloop
+from repro.core.mapper import MapspaceConstraints
+from repro.core.presets import scnn_like, three_level_arch
+from repro.dse import run_islands
+from repro.search import run_search
+
+from .common import emit
+
+SERVICE_JSON = "BENCH_service.json"
+
+N_CLIENTS = 4
+POP = 32
+GENERATIONS = 6
+#: the free-permutation encoding lowers the whole population onto ONE
+#: TemplateBucket (see search.encoding.decode_bucketed), so the
+#: structural compile bound for any number of clients is 1
+BUCKET_COUNT = 1
+
+
+def _setup():
+    """Table-5 conv2_x (ResNet50 as an im2col GEMM) on the SCNN-like
+    three-level design, free permutations — the same search space the
+    convergence bench runs, shared by all clients."""
+    wl = matmul(3136, 576, 64, densities={"A": ("uniform", 0.4),
+                                          "B": ("uniform", 0.55)})
+    design = scnn_like(three_level_arch())
+    cons = MapspaceConstraints(budget=N_CLIENTS * POP * GENERATIONS,
+                               seed=0, spatial={1: {"n": 8}})
+    return design, wl, cons
+
+
+def _oracle_check(design, wl, result, tag: str) -> float:
+    """Re-evaluate a returned winner through a FRESH scalar oracle; any
+    drift from the result's EDP fails."""
+    assert result.best is not None, f"{tag}: no validated winner"
+    ev = Sparseloop(design).evaluate(wl, result.best_nest)
+    rel = abs(ev.edp - result.best.edp) / max(1e-30, abs(ev.edp))
+    assert ev.result.valid and rel <= 1e-6, (
+        f"{tag}: winner disagrees with the scalar oracle "
+        f"(rel {rel:.3e}, valid={ev.result.valid})")
+    return float(ev.edp)
+
+
+def _isolated_baseline(design, wl, cons) -> dict:
+    """N sequential isolated runners: each clears the program caches
+    first (a fresh process would start cold), so each pays its own
+    compile — the thing the shared service amortizes away."""
+    wall = 0.0
+    evals = 0
+    compiles = 0
+    winners = []
+    for i in range(N_CLIENTS):
+        clear_caches()
+        with compile_stats.track() as st:
+            t0 = time.perf_counter()
+            res = run_search(design, wl, cons, strategy="es", key=i,
+                             pop_size=POP, generations=GENERATIONS,
+                             mesh=None)
+            wall += time.perf_counter() - t0
+        evals += res.evaluated
+        compiles += st.compiles
+        winners.append(_oracle_check(design, wl, res, f"isolated[{i}]"))
+    return {"runners": N_CLIENTS, "wall_s": wall, "evaluations": evals,
+            "compiles": compiles, "winners_edp": winners,
+            "candidates_per_s": evals / max(1e-9, wall)}
+
+
+def _service_run(design, wl, cons) -> tuple[dict, object]:
+    """N concurrent island clients through one fresh service (cold
+    caches, so its single compile is *included* in the wall-clock)."""
+    clear_caches()
+    with compile_stats.track() as st:
+        res = run_islands(design, wl, cons, n_islands=N_CLIENTS,
+                          strategy="es", key=0, pop_size=POP,
+                          generations=GENERATIONS, migrate_every=2)
+    winners = [_oracle_check(design, wl, r, f"island[{i}]")
+               for i, r in enumerate(res.per_island)]
+    stats = {"clients": N_CLIENTS, "wall_s": res.wall_s,
+             "evaluations": res.evaluations,
+             "compiles": st.compiles, "programs": st.programs,
+             "scalar_evals": st.scalar_evals,
+             "winners_edp": winners,
+             "candidates_per_s": res.evaluations / max(1e-9, res.wall_s),
+             "service": res.service_stats}
+    return stats, st
+
+
+def _write_json(blob: dict) -> None:
+    with open(SERVICE_JSON, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {SERVICE_JSON}")
+
+
+def _rows(service: dict, baseline: dict) -> list[tuple[str, float, str]]:
+    cps_s = service["candidates_per_s"]
+    cps_b = baseline["candidates_per_s"]
+    us = service["wall_s"] * 1e6 / max(1, service["evaluations"])
+    # cphc_service = candidates/sec of the N-client service run; the
+    # cphc prefix enrolls it in the benchmarks.run --gate regression
+    # comparison (ratios only, so the unit just has to stay consistent)
+    return [("dse_service", us,
+             f"clients={service['clients']};"
+             f"evals={service['evaluations']};"
+             f"compiles={service['compiles']};"
+             f"bucket_count={BUCKET_COUNT};"
+             f"coalesced={service['service']['coalesced_requests']};"
+             f"batches={service['service']['batches']};"
+             f"cphc_service={cps_s:.0f}"),
+            ("dse_service_vs_isolated", 0.0,
+             f"service_cps={cps_s:.0f};isolated_cps={cps_b:.0f};"
+             f"isolated_compiles={baseline['compiles']};"
+             f"speedup={cps_s / max(1e-9, cps_b):.2f}x")]
+
+
+def _gate(service: dict, baseline: dict) -> None:
+    assert service["compiles"] <= BUCKET_COUNT, (
+        f"{N_CLIENTS} island clients compiled {service['compiles']} "
+        f"programs; the shared service must stay within the bucket "
+        f"count ({BUCKET_COUNT}), not clients x buckets")
+    assert service["scalar_evals"] == 0, (
+        f"service run touched the scalar path "
+        f"({service['scalar_evals']} evals)")
+    assert service["service"]["coalesced_requests"] > 0, (
+        "no cross-request batching happened: concurrent island "
+        "generations never coalesced into a shared invocation")
+    cps_s = service["candidates_per_s"]
+    cps_b = baseline["candidates_per_s"]
+    assert cps_s >= cps_b, (
+        f"service throughput lost to isolated runners: "
+        f"{cps_s:.0f} vs {cps_b:.0f} candidates/s")
+    print(f"service gate: compiles {service['compiles']} <= "
+          f"{BUCKET_COUNT} bucket(s), {N_CLIENTS} clients, "
+          f"{service['service']['coalesced_requests']} requests "
+          f"coalesced, {cps_s:.0f} vs isolated {cps_b:.0f} "
+          f"candidates/s ({cps_s / max(1e-9, cps_b):.2f}x), all "
+          f"winners oracle-confirmed")
+
+
+def service_smoke() -> list[tuple[str, float, str]]:
+    design, wl, cons = _setup()
+    baseline = _isolated_baseline(design, wl, cons)
+    service, _ = _service_run(design, wl, cons)
+    _write_json({"baseline": baseline, "service": service})
+    _gate(service, baseline)
+    return _rows(service, baseline)
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = service_smoke()
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    if "--service-smoke" in sys.argv[1:]:
+        emit(service_smoke())
+    else:
+        run()

@@ -1,0 +1,138 @@
+"""The bench-smoke gate manifest: every CI perf/correctness gate as one
+data entry, run by ``python -m benchmarks.run --gate-suite``.
+
+The bench-smoke workflow job used to be ~12 copy-pasted ``timeout N
+python -m benchmarks...`` steps; adding a gate meant editing YAML and
+nothing ran the same sequence locally.  Now the workflow is just
+install + ``--gate-suite`` + artifact upload, and this manifest is the
+single source of truth for what must pass — runnable locally with the
+exact CI timeouts.
+
+Gates run in manifest order and the suite stops at the first failure,
+naming the gate (same semantics as sequential workflow steps).  Pass
+substring filters to run a subset::
+
+  PYTHONPATH=src python -m benchmarks.run --gate-suite            # all
+  PYTHONPATH=src python -m benchmarks.run --gate-suite fleet      # subset
+  PYTHONPATH=src python -m benchmarks.gates --list                # show
+"""
+from __future__ import annotations
+
+import dataclasses
+import subprocess
+import sys
+import time
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    """One CI gate: a command (argv after the python executable), its
+    wall-clock cap, and the one-line claim it enforces."""
+
+    name: str
+    argv: tuple[str, ...]
+    timeout_s: int
+    note: str = ""
+
+
+#: manifest order is execution order; the regression gate deliberately
+#: follows the bench run that writes the BENCH_results.json it reads
+GATES: tuple[Gate, ...] = (
+    Gate("bench-run",
+         ("-m", "benchmarks.run", "fig1", "vmapper"), 900,
+         "fig1 + batched-mapper benches run clean and write "
+         "BENCH_results.json"),
+    Gate("regression-gate",
+         ("-m", "benchmarks.run", "--gate", "BENCH_results.json"), 300,
+         ">25% CPHC drop vs benchmarks/baseline.json fails (common-mode "
+         "corrected)"),
+    Gate("search-smoke",
+         ("-m", "benchmarks.bench_search_convergence", "--smoke"), 300,
+         "tiny-budget ES converges with a monotone best-so-far curve"),
+    Gate("bucketed-compile-gate",
+         ("-m", "benchmarks.bench_bucketed_sweep", "--compile-gate"), 600,
+         "free-permutation ES over all four Table 5 layers rides ONE "
+         "compiled bucket program (compiles <= buckets, not layers x "
+         "buckets), zero scalar evals"),
+    Gate("shared-program-smoke",
+         ("-m", "benchmarks.bench_bucketed_sweep", "--shared-smoke"), 300,
+         "uniform + actual-data layers share one compiled program with "
+         "<= 1e-6 scalar-oracle parity"),
+    Gate("codesign-compile-gate",
+         ("-m", "benchmarks.bench_codesign", "--compile-gate"), 600,
+         "N>=8-design Table 5 sweep compiles once per bucket (arch "
+         "scalars are traced ArchParams), per-design oracle parity"),
+    Gate("bucketed-smoke",
+         ("-m", "benchmarks.bench_bucketed_sweep", "--smoke"), 600,
+         "padded-bucket parity + compile bound on the full smoke slice"),
+    Gate("fleet-compile-gate",
+         ("-m", "benchmarks.bench_fleet", "--compile-gate"), 900,
+         "every LM config x sparsity option rides one program per design "
+         "point; warm re-sweep adds ZERO compiles"),
+    Gate("fleet-agreement-smoke",
+         ("-m", "benchmarks.bench_fleet", "--agreement-smoke"), 900,
+         "advisor verdict signs agree with measured interpret-mode "
+         "Pallas kernels on the reduced configs"),
+    Gate("trace-smoke",
+         ("-m", "benchmarks.bench_obs", "--trace-smoke"), 600,
+         "REPRO_TRACE fleet sweep emits a schema-valid Perfetto trace "
+         "whose engine.compile spans agree with compile_stats"),
+    Gate("overhead-smoke",
+         ("-m", "benchmarks.bench_obs", "--overhead-smoke"), 600,
+         "disabled tracer costs < 5% of the warm sweep"),
+    Gate("service-smoke",
+         ("-m", "benchmarks.bench_service", "--service-smoke"), 900,
+         "4 concurrent island clients through one EvaluationService "
+         "share bucket programs (compiles <= buckets, not clients x "
+         "buckets), winners match the scalar oracle, and throughput "
+         "beats 4 isolated runners; writes BENCH_service.json"),
+)
+
+
+def list_gates() -> None:
+    for g in GATES:
+        print(f"{g.name:24s} timeout={g.timeout_s:4d}s  "
+              f"python {' '.join(g.argv)}")
+        if g.note:
+            print(f"{'':24s} {g.note}")
+
+
+def run_suite(filters: list[str] | None = None) -> None:
+    """Run the (filtered) gates in order; SystemExit naming the first
+    gate that fails or times out."""
+    filters = [f for f in (filters or []) if not f.startswith("-")]
+    selected = [g for g in GATES
+                if not filters or any(f in g.name for f in filters)]
+    if not selected:
+        raise SystemExit(f"no gates match filters {filters!r}; known: "
+                         f"{[g.name for g in GATES]}")
+    passed = []
+    for g in selected:
+        print(f"\n{'=' * 72}\n== gate: {g.name}  "
+              f"(timeout {g.timeout_s}s)\n{'=' * 72}", flush=True)
+        t0 = time.perf_counter()
+        try:
+            proc = subprocess.run([sys.executable, *g.argv],
+                                  timeout=g.timeout_s)
+        except subprocess.TimeoutExpired:
+            raise SystemExit(
+                f"gate FAILED: {g.name} exceeded its {g.timeout_s}s "
+                f"timeout ({len(passed)} gate(s) passed before it: "
+                f"{passed})")
+        elapsed = time.perf_counter() - t0
+        if proc.returncode != 0:
+            raise SystemExit(
+                f"gate FAILED: {g.name} exited {proc.returncode} after "
+                f"{elapsed:.1f}s ({len(passed)} gate(s) passed before "
+                f"it: {passed})")
+        passed.append(g.name)
+        print(f"gate passed: {g.name} ({elapsed:.1f}s)", flush=True)
+    print(f"\ngate suite passed: {len(passed)}/{len(selected)} gate(s) "
+          f"({', '.join(passed)})")
+
+
+if __name__ == "__main__":
+    if "--list" in sys.argv[1:]:
+        list_gates()
+    else:
+        run_suite(sys.argv[1:])

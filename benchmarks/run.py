@@ -25,6 +25,13 @@ job outright instead of only tripping the job timeout.  Only rows (and
 keys) present in BOTH files are compared, so running a bench subset
 gates just that subset.
 
+Gate suite (CI)
+---------------
+``python -m benchmarks.run --gate-suite [filters...]`` runs every CI
+gate from the ``benchmarks/gates.py`` manifest in order with the CI
+timeouts — the bench-smoke job is exactly install + this + artifact
+upload, so the full gate sequence is reproducible locally.
+
 Refreshing the baseline
 -----------------------
 ``python -m benchmarks.run --update-baseline [filters...]`` runs the
@@ -146,9 +153,9 @@ def registry() -> list[tuple[str, object]]:
                    bench_fig12_eyerissv2, bench_fig13_dstc,
                    bench_fig15_16_stc_study, bench_fig17_codesign,
                    bench_fleet, bench_kernels, bench_obs,
-                   bench_search_convergence, bench_stc_exact,
-                   bench_table5_cphc, bench_table7_compression,
-                   bench_vmapper)
+                   bench_search_convergence, bench_service,
+                   bench_stc_exact, bench_table5_cphc,
+                   bench_table7_compression, bench_vmapper)
 
     return [
         ("fig1_formats", bench_fig1_formats),
@@ -167,6 +174,7 @@ def registry() -> list[tuple[str, object]]:
         ("kernels", bench_kernels),
         ("fleet", bench_fleet),
         ("obs", bench_obs),
+        ("dse_service", bench_service),
     ]
 
 
@@ -312,6 +320,10 @@ def main() -> None:
     try:
         if argv and argv[0] == "--gate":
             gate(argv[1:])
+            return
+        if argv and argv[0] == "--gate-suite":
+            from .gates import run_suite
+            run_suite(argv[1:])
             return
         if argv and argv[0] == "--update-baseline":
             update_baseline(argv[1:])

@@ -105,6 +105,7 @@ it.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 
 import jax
@@ -509,33 +510,44 @@ class _ProgramRecord:
         """First evaluation at a shape is when jit actually compiles.
         Returns True on that first sighting so the caller can attribute
         the evaluation's wall-clock to compile (vs warm-eval) time."""
-        if shape_key not in self.compiled:
-            self.compiled.add(shape_key)
-            compile_stats.record_compile(self.kind)
-            return True
-        return False
+        with _CACHE_LOCK:
+            if shape_key not in self.compiled:
+                self.compiled.add(shape_key)
+                compile_stats.record_compile(self.kind)
+                return True
+            return False
 
     def sharded(self, mesh):
         key = (tuple(d.id for d in mesh.devices.flat), mesh.axis_names)
-        fn = self.sharded_fns.get(key)
-        if fn is None:
-            from jax.sharding import PartitionSpec as P
+        with _CACHE_LOCK:
+            fn = self.sharded_fns.get(key)
+            if fn is None:
+                from jax.sharding import PartitionSpec as P
 
-            from ..runtime.compression import shard_map
-            # batch args (bounds, rank ids, per-candidate arch rows)
-            # shard their leading (candidate) axis; the workload params
-            # are replicated on every device
-            spec = P(mesh.axis_names[0])
-            fn = jax.jit(shard_map(
-                jax.vmap(self.single, in_axes=(0, None)),
-                mesh=mesh, in_specs=(spec, P()), out_specs=spec,
-                check_vma=False))
-            self.sharded_fns[key] = fn
-        return fn
+                from ..runtime.compression import shard_map
+                # batch args (bounds, rank ids, per-candidate arch rows)
+                # shard their leading (candidate) axis; the workload
+                # params are replicated on every device
+                spec = P(mesh.axis_names[0])
+                fn = jax.jit(shard_map(
+                    jax.vmap(self.single, in_axes=(0, None)),
+                    mesh=mesh, in_specs=(spec, P()), out_specs=spec,
+                    check_vma=False))
+                self.sharded_fns[key] = fn
+            return fn
 
 
 _PROGRAM_CACHE: dict = {}
 _PROGRAM_CACHE_CAP = 128
+
+#: guards _PROGRAM_CACHE / _MODEL_CACHE lookup-and-insert plus the
+#: per-record compile bookkeeping: the caches are process-global and the
+#: DSE service's clients (and any direct caller on another thread) may
+#: race a facade construction — without the lock two threads could trace
+#: the same program twice and the compile-count CI gates would flake.
+#: An RLock because a facade constructor under _CACHE_LOCK re-enters
+#: _init_program.
+_CACHE_LOCK = threading.RLock()
 
 
 class _TracedNestModel:
@@ -615,26 +627,27 @@ class _TracedNestModel:
                _freeze(self.safs.formats),
                self.safs.actions, workload_structure(self.workload),
                self.caps, self.check_capacity, token)
-        rec = _PROGRAM_CACHE.get(key)
-        if rec is None:
-            with obs.span("engine.program", kind=self.kind,
-                          workload=self.workload.name):
-                host = copy.copy(self)
-                host.workload_params = None  # drop the heavy arrays
-                host.arch_params = None
-                host._prog = None
-                rec = _ProgramRecord(
-                    kind=self.kind, single=host._vmapped,
-                    fn=jax.jit(jax.vmap(host._vmapped,
-                                        in_axes=(0, None))))
-            compile_stats.record_program(self.kind)
-            if len(_PROGRAM_CACHE) >= _PROGRAM_CACHE_CAP:
-                _PROGRAM_CACHE.pop(next(iter(_PROGRAM_CACHE)))
-            _PROGRAM_CACHE[key] = rec
-        else:
-            compile_stats.record_program_share(rec.kind)
-            self.program_shared = True
-        self._prog = rec
+        with _CACHE_LOCK:
+            rec = _PROGRAM_CACHE.get(key)
+            if rec is None:
+                with obs.span("engine.program", kind=self.kind,
+                              workload=self.workload.name):
+                    host = copy.copy(self)
+                    host.workload_params = None  # drop the heavy arrays
+                    host.arch_params = None
+                    host._prog = None
+                    rec = _ProgramRecord(
+                        kind=self.kind, single=host._vmapped,
+                        fn=jax.jit(jax.vmap(host._vmapped,
+                                            in_axes=(0, None))))
+                compile_stats.record_program(self.kind)
+                if len(_PROGRAM_CACHE) >= _PROGRAM_CACHE_CAP:
+                    _PROGRAM_CACHE.pop(next(iter(_PROGRAM_CACHE)))
+                _PROGRAM_CACHE[key] = rec
+            else:
+                compile_stats.record_program_share(rec.kind)
+                self.program_shared = True
+            self._prog = rec
 
     def _bind_params(self, workload_params: WorkloadParams | None
                      ) -> tuple:
@@ -1401,16 +1414,17 @@ def _cache_key(design, workload: Workload, shape_key,
 def _get_model(cls, design, workload: Workload, shape, check_capacity,
                caps=None):
     key = _cache_key(design, workload, shape, check_capacity, caps)
-    model = _MODEL_CACHE.get(key)
-    if model is None:
-        model = cls(design, workload, shape,
-                    check_capacity=check_capacity, caps=caps)
-        if len(_MODEL_CACHE) >= _MODEL_CACHE_CAP:
-            _MODEL_CACHE.pop(next(iter(_MODEL_CACHE)))
-        _MODEL_CACHE[key] = model
-    else:
-        compile_stats.record_cache_hit()
-    return model
+    with _CACHE_LOCK:
+        model = _MODEL_CACHE.get(key)
+        if model is None:
+            model = cls(design, workload, shape,
+                        check_capacity=check_capacity, caps=caps)
+            if len(_MODEL_CACHE) >= _MODEL_CACHE_CAP:
+                _MODEL_CACHE.pop(next(iter(_MODEL_CACHE)))
+            _MODEL_CACHE[key] = model
+        else:
+            compile_stats.record_cache_hit()
+        return model
 
 
 def get_batched_model(design, workload: Workload, template: NestTemplate,
@@ -1437,8 +1451,9 @@ def clear_caches() -> None:
     """Drop the facade and compiled-program caches (a testing hook:
     exact compile-count assertions otherwise depend on process-global
     cache state).  ``compile_stats`` counters are left untouched."""
-    _MODEL_CACHE.clear()
-    _PROGRAM_CACHE.clear()
+    with _CACHE_LOCK:
+        _MODEL_CACHE.clear()
+        _PROGRAM_CACHE.clear()
 
 
 def group_by_template(nests) -> dict[NestTemplate, list[int]]:

@@ -6,6 +6,11 @@ that slot by re-prefilling it and splicing its KV cache into the batch
 (dynamic_update_slice on the batch axis).  This is the standard
 continuous-batching loop, CPU-runnable on reduced configs.
 
+The loop itself is :class:`ServeLoop` — a submit/cancel/shutdown object
+so tests can drive it step-by-step under concurrent clients (queue-depth
+gauge, request-latency histogram, mid-batch cancellation, draining
+shutdown); ``main()`` is a thin CLI over it.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
       --requests 8 --batch 4 --prompt-len 16 --gen 24
 """
@@ -35,6 +40,211 @@ def _splice_cache(pool, single, slot: int):
     return jax.tree.map(upd, pool, single)
 
 
+class ServeLoop:
+    """Continuous-batching decode loop with explicit request lifecycle.
+
+    ``submit`` enqueues a prompt, ``start`` prefills the first wave,
+    each ``step`` runs one decode over the slot pool (completing slots
+    refill from the queue), ``cancel`` removes a request whether it is
+    still queued or already decoding mid-batch (its slot frees at the
+    next step, no latency is recorded), and ``shutdown`` closes
+    admissions — ``drain=True`` finishes the in-flight slots first,
+    ``drain=False`` abandons them.  Per-request latency (enqueue ->
+    last token) lands in the ``serve.request_latency_s`` histogram,
+    queue depth in the ``serve.queue_depth`` gauge, generated tokens in
+    the ``serve.tokens`` counter.
+    """
+
+    def __init__(self, api, cfg, params, *, batch: int, prompt_len: int,
+                 gen: int, temperature: float = 0.0, seed: int = 0):
+        if cfg.enc_dec:
+            raise ValueError("ServeLoop drives decoder-only archs")
+        self.api, self.cfg, self.params = api, cfg, params
+        self.batch = int(batch)
+        self.prompt_len = int(prompt_len)
+        self.gen = int(gen)
+        self.temperature = float(temperature)
+        self.S_max = self.prompt_len + self.gen + 1
+        self._prefill = jax.jit(
+            lambda p, t: api.prefill(p, t, cfg, self.S_max))
+        self._decode = jax.jit(
+            lambda p, cache, tok, pos: api.decode_step(p, tok, cache,
+                                                       pos, cfg))
+        self._key = jax.random.PRNGKey(seed)
+        self._lat = metrics.histogram("serve.request_latency_s")
+        self._depth = metrics.gauge("serve.queue_depth")
+        self._tokens = metrics.counter("serve.tokens")
+        self._queue: list[int] = []
+        self._prompts: dict[int, np.ndarray] = {}
+        self._t_submit: dict[int, float] = {}
+        self._cancelled: set[int] = set()
+        self.outputs: dict[int, list[int]] = {}
+        self.latencies: list[float] = []
+        self.served = 0
+        self.decode_steps = 0
+        self._closed = False
+        self._cache = None
+        self._tok = None
+        self._slot_req: list[int | None] = []
+        self._slot_len: list[int] = []
+        self._pos = np.zeros(0, np.int32)
+        self._t0 = self._t_last = time.perf_counter()
+
+    # ----------------------------------------------------- client API
+    def submit(self, rid: int, prompt) -> None:
+        """Enqueue one request (a (prompt_len,) token array)."""
+        if self._closed:
+            raise RuntimeError("submit() on a shut-down ServeLoop")
+        if rid in self._prompts:
+            raise ValueError(f"duplicate request id {rid}")
+        self._prompts[rid] = np.asarray(prompt, np.int32)
+        self._t_submit[rid] = time.perf_counter()
+        self.outputs[rid] = []
+        self._queue.append(rid)
+        self._depth.set(len(self._queue))
+
+    def cancel(self, rid: int) -> bool:
+        """Drop a request.  Queued: removed immediately.  Decoding: its
+        slot frees (and refills) at the next step, with no latency
+        observation.  Returns False when unknown or already finished."""
+        if rid in self._queue:
+            self._queue.remove(rid)
+            self._depth.set(len(self._queue))
+            self._cancelled.add(rid)
+            return True
+        if rid in self._slot_req:
+            self._cancelled.add(rid)
+            return True
+        return False
+
+    @property
+    def active(self) -> int:
+        """Requests currently holding a decode slot."""
+        return sum(r is not None for r in self._slot_req)
+
+    @property
+    def pending(self) -> int:
+        """Requests queued but not yet admitted to a slot."""
+        return len(self._queue)
+
+    # ------------------------------------------------------- the loop
+    def start(self) -> None:
+        """Prefill the first wave (up to ``batch`` queued requests)."""
+        if self._cache is not None or not self._queue:
+            return
+        active = self._queue[:self.batch]
+        del self._queue[:len(active)]
+        self._depth.set(len(self._queue))
+        self._t0 = self._t_last = time.perf_counter()
+        batch = jnp.asarray(np.stack([self._prompts[r] for r in active]))
+        with obs.span("serve.prefill", requests=len(active)):
+            logits, self._cache = self._prefill(self.params, batch)
+            logits.block_until_ready()
+        self._tok = jnp.argmax(logits[:, -1, :], -1
+                               ).astype(jnp.int32)[:, None]
+        self._slot_req = list(active)
+        self._slot_len = [0] * len(active)
+        self._pos = np.full(len(active), self.prompt_len, np.int32)
+
+    def _sample(self, logits) -> np.ndarray:
+        if self.temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+            nxt = jax.random.categorical(
+                sub, logits[:, -1, :] / self.temperature)
+        else:
+            nxt = jnp.argmax(logits[:, -1, :], -1)
+        return np.asarray(nxt.astype(jnp.int32))
+
+    def _finish_slot(self, b: int, tok_np: np.ndarray,
+                     served: bool) -> None:
+        rid = self._slot_req[b]
+        if served:
+            self.served += 1
+            lat_s = time.perf_counter() - self._t_submit[rid]
+            self._lat.observe(lat_s)
+            self.latencies.append(lat_s)
+        if self._queue and not self._closed:
+            r2 = self._queue.pop(0)        # continuous batching: refill
+            self._depth.set(len(self._queue))
+            with obs.span("serve.prefill", requests=1, refill=True,
+                          slot=b):
+                lg, c1 = self._prefill(
+                    self.params,
+                    jnp.asarray(self._prompts[r2][None, :]))
+            self._cache = _splice_cache(self._cache, c1, b)
+            tok_np[b] = int(np.argmax(np.asarray(lg)[0, -1]))
+            self._slot_req[b] = r2
+            self._slot_len[b] = 0
+            self._pos[b] = self.prompt_len
+        else:
+            self._slot_req[b] = None
+
+    def step(self) -> bool:
+        """One decode step over the slot pool; False when idle (nothing
+        admitted, every slot free, or the cache axis is exhausted)."""
+        if self._cache is None and self._queue and not self._closed:
+            self.start()
+        if self._cache is None or self.active == 0:
+            return False
+        if not (self._pos < self.S_max - 1).any():
+            return False
+        with obs.span("serve.decode_step", step=self.decode_steps):
+            logits, self._cache = self._decode(
+                self.params, self._cache, self._tok,
+                jnp.asarray(self._pos))
+        self.decode_steps += 1
+        nxt = self._sample(logits)
+        self._pos = np.minimum(self._pos + 1, self.S_max - 1)
+        tok_np = nxt.copy()
+        for b in range(len(self._slot_req)):
+            r = self._slot_req[b]
+            if r is None:
+                continue
+            if r in self._cancelled:       # freed mid-batch, no latency
+                self._finish_slot(b, tok_np, served=False)
+                continue
+            self.outputs[r].append(int(nxt[b]))
+            self._tokens.add(1)
+            self._slot_len[b] += 1
+            if self._slot_len[b] >= self.gen:
+                self._finish_slot(b, tok_np, served=True)
+        self._tok = jnp.asarray(tok_np)[:, None]
+        self._t_last = time.perf_counter()
+        return self.active > 0 or (bool(self._queue)
+                                   and not self._closed)
+
+    def drain(self) -> None:
+        while self.step():
+            pass
+
+    def shutdown(self, drain: bool = True) -> None:
+        """Close admissions.  ``drain=True`` finishes the in-flight
+        slots (queued-but-unstarted requests stay unserved);
+        ``drain=False`` abandons the in-flight slots too."""
+        self._closed = True
+        if drain:
+            self.drain()
+        else:
+            self._slot_req = [None] * len(self._slot_req)
+
+    # --------------------------------------------------------- results
+    def result(self) -> dict:
+        dt = max(1e-9, self._t_last - self._t0)
+        tput = sum(len(v) for v in self.outputs.values()) / dt
+        return {
+            "outputs": self.outputs,
+            "tokens_per_s": tput,
+            "latency_s": {
+                "count": len(self.latencies),
+                "mean_s": (sum(self.latencies) / len(self.latencies)
+                           if self.latencies else 0.0),
+                "max_s": max(self.latencies, default=0.0),
+                "p50_s": self._lat.percentile(50),
+                "p99_s": self._lat.percentile(99),
+            },
+        }
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen2-0.5b")
@@ -52,104 +262,29 @@ def main(argv=None) -> dict:
         raise SystemExit("serve.py drives decoder-only archs; whisper is "
                          "exercised via tests/examples")
     api = get_api(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params, _ = api.init(cfg, key)
-
-    S_max = args.prompt_len + args.gen + 1
-    B = args.batch
-    prefill = jax.jit(lambda p, t: api.prefill(p, t, cfg, S_max))
-    decode = jax.jit(lambda p, cache, tok, pos:
-                     api.decode_step(p, tok, cache, pos, cfg))
+    params, _ = api.init(cfg, jax.random.PRNGKey(args.seed))
 
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(1, cfg.vocab_size,
                            size=(args.requests, args.prompt_len)
                            ).astype(np.int32)
 
-    # per-request latency (enqueue -> last generated token) lands in the
-    # serve.request_latency_s histogram; queue depth is a live gauge
-    lat = metrics.histogram("serve.request_latency_s")
-    depth = metrics.gauge("serve.queue_depth")
-    tokens = metrics.counter("serve.tokens")
+    loop = ServeLoop(api, cfg, params, batch=args.batch,
+                     prompt_len=args.prompt_len, gen=args.gen,
+                     temperature=args.temperature, seed=args.seed)
+    for r in range(args.requests):
+        loop.submit(r, prompts[r])
+    loop.start()
+    loop.drain()
 
-    # initial wave fills all slots
-    t0 = time.perf_counter()
-    queue = list(range(args.requests))
-    active = queue[:B]
-    queue = queue[B:]
-    depth.set(len(queue))
-    with obs.span("serve.prefill", requests=len(active)):
-        logits, cache = prefill(params, jnp.asarray(prompts[active]))
-        logits.block_until_ready()
-    tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
-    slot_req = list(active)
-    slot_len = [0] * B
-    # per-slot positions: refilled slots restart at prompt_len while the
-    # others keep advancing (decode takes a (B,) position vector)
-    pos = np.full(B, args.prompt_len, np.int32)
-    outputs: dict[int, list[int]] = {r: [] for r in range(args.requests)}
-    done = 0
-    total_decode = 0
-    latencies: list[float] = []
-
-    while done < args.requests and (pos < S_max - 1).any():
-        with obs.span("serve.decode_step", step=total_decode):
-            logits, cache = decode(params, cache, tok, jnp.asarray(pos))
-        total_decode += 1
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            nxt = jax.random.categorical(sub,
-                                         logits[:, -1, :]
-                                         / args.temperature)
-        else:
-            nxt = jnp.argmax(logits[:, -1, :], -1)
-        nxt = np.asarray(nxt.astype(jnp.int32))
-        pos = np.minimum(pos + 1, S_max - 1)
-        tok_np = nxt.copy()
-        for b in range(B):
-            r = slot_req[b]
-            if r is None:
-                continue
-            outputs[r].append(int(nxt[b]))
-            tokens.add(1)
-            slot_len[b] += 1
-            if slot_len[b] >= args.gen:
-                done += 1
-                lat_s = time.perf_counter() - t0
-                lat.observe(lat_s)
-                latencies.append(lat_s)
-                if queue:   # continuous batching: refill the slot
-                    r2 = queue.pop(0)
-                    depth.set(len(queue))
-                    with obs.span("serve.prefill", requests=1,
-                                  refill=True, slot=b):
-                        lg, c1 = prefill(params,
-                                         jnp.asarray(prompts[r2:r2 + 1]))
-                    cache = _splice_cache(cache, c1, b)
-                    tok_np[b] = int(np.argmax(np.asarray(lg)[0, -1]))
-                    slot_req[b] = r2
-                    slot_len[b] = 0
-                    pos[b] = args.prompt_len
-                else:
-                    slot_req[b] = None
-        tok = jnp.asarray(tok_np)[:, None]
-
-    dt = time.perf_counter() - t0
-    tput = sum(len(v) for v in outputs.values()) / dt
-    lat_summary = {
-        "count": len(latencies),
-        "mean_s": (sum(latencies) / len(latencies)) if latencies else 0.0,
-        "max_s": max(latencies, default=0.0),
-        "p50_s": lat.percentile(50),
-        "p99_s": lat.percentile(99),
-    }
-    print(f"[serve] {args.requests} requests, {total_decode} decode steps,"
-          f" {tput:.1f} tok/s (CPU reduced config); "
-          f"latency mean {lat_summary['mean_s'] * 1e3:.0f} ms "
-          f"p99<={lat_summary['p99_s'] * 1e3:.0f} ms, "
-          f"peak queue depth {depth.max:.0f}")
-    return {"outputs": outputs, "tokens_per_s": tput,
-            "latency_s": lat_summary}
+    res = loop.result()
+    lat = res["latency_s"]
+    print(f"[serve] {args.requests} requests, {loop.decode_steps} decode"
+          f" steps, {res['tokens_per_s']:.1f} tok/s (CPU reduced "
+          f"config); latency mean {lat['mean_s'] * 1e3:.0f} ms "
+          f"p99<={lat['p99_s'] * 1e3:.0f} ms, "
+          f"peak queue depth {metrics.gauge('serve.queue_depth').max:.0f}")
+    return res
 
 
 if __name__ == "__main__":

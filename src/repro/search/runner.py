@@ -190,13 +190,19 @@ class PopulationEvaluator:
 
     def __init__(self, design, workload: Workload, enc: MapspaceEncoding,
                  mesh=None, check_capacity: bool = True,
-                 config: SearchConfig | None = None):
+                 config: SearchConfig | None = None,
+                 service=None):
         self.model = Sparseloop(design)
         self.workload = workload
         self.enc = enc
         self.mesh = mesh
         self.check_capacity = check_capacity
         self.config = config or SearchConfig()
+        #: a ``repro.dse`` ServiceClient (or EvaluationService): batched
+        #: evaluations are submitted as population requests instead of
+        #: invoked inline, so concurrent searches coalesce into shared
+        #: compiled-program invocations (the service owns the mesh)
+        self.service = service
         self.batched = batched_supported(design, workload)
         #: (design, mapping) co-search: the genome carries design genes
         #: that decode to per-candidate traced ArchParams rows, so a
@@ -229,7 +235,12 @@ class PopulationEvaluator:
                 self.workload, bucket, check_capacity=self.check_capacity)
             ap = (self.enc.arch_params_of(genomes)
                   if self.cosearch else None)
-            res = bm.evaluate(bounds, ids, mesh=self.mesh, arch_params=ap)
+            if self.service is not None:
+                res = self.service.evaluate(bm, bounds, rank_ids=ids,
+                                            arch_params=ap)
+            else:
+                res = bm.evaluate(bounds, ids, mesh=self.mesh,
+                                  arch_params=ap)
             for k in METRICS:
                 out[k][:] = res[k]
             out["valid"][:] = res["valid"]
@@ -242,9 +253,13 @@ class PopulationEvaluator:
                 bm = self.model.batched_model(
                     self.workload, template,
                     check_capacity=self.check_capacity)
-                res = bm.evaluate(
-                    bounds, mesh=self.mesh,
-                    arch_params=ap_all.take(idx) if ap_all else None)
+                ap = ap_all.take(idx) if ap_all else None
+                if self.service is not None:
+                    res = self.service.evaluate(bm, bounds,
+                                                arch_params=ap)
+                else:
+                    res = bm.evaluate(bounds, mesh=self.mesh,
+                                      arch_params=ap)
                 for k in METRICS:
                     out[k][idx] = res[k]
                 out["valid"][idx] = res["valid"]
@@ -277,6 +292,7 @@ def run_search(design, workload: Workload,
                batch_threshold: int | None = None,
                log_to: SearchLog | None = None,
                design_space: DesignSpace | None = None,
+               service=None,
                **strategy_options) -> SearchResult:
     """Stochastic mapspace search.  Returns a ``SearchResult`` whose
     ``log`` attribute holds the per-generation trajectory.
@@ -298,6 +314,14 @@ def run_search(design, workload: Workload,
     ``ArchParams`` rows), and the returned result's winner — validated
     by the scalar oracle *under its own design* — carries that design
     in ``SearchResult.best_design``.
+
+    ``service`` (a ``repro.dse`` ServiceClient or EvaluationService)
+    routes every batched population evaluation through a persistent
+    evaluation service instead of invoking compiled programs inline:
+    concurrent searches sharing one service coalesce their generations
+    into shared program invocations (cross-request batching), and the
+    service — which owns the device mesh — does the sharding, so
+    ``mesh`` is forced to None.
     """
     import jax.random as jrandom
 
@@ -310,7 +334,9 @@ def run_search(design, workload: Workload,
             workload, design.arch.num_levels, cons, design_space, design)
     else:
         enc = MapspaceEncoding(workload, design.arch.num_levels, cons)
-    if mesh == "auto":
+    if service is not None:
+        mesh = None        # the service owns the devices
+    elif mesh == "auto":
         mesh = population_mesh()
     config = config or SearchConfig()
     if batch_threshold is not None:
@@ -318,7 +344,7 @@ def run_search(design, workload: Workload,
                                      batch_threshold=batch_threshold)
     evaluate = PopulationEvaluator(design, workload, enc, mesh=mesh,
                                    check_capacity=check_capacity,
-                                   config=config)
+                                   config=config, service=service)
 
     seed = key if isinstance(key, (int, np.integer)) else None
     if seed is not None:

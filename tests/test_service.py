@@ -1,0 +1,258 @@
+"""DSE-as-a-service (repro.dse): cross-request batching parity,
+deterministic coalescing, multi-tenant accounting, island search
+integration, and shutdown semantics.
+
+The contracts under test:
+
+* routing a population through the service returns EXACTLY what the
+  direct ``BucketedModel.evaluate`` path returns (the service is a
+  transport, never a model);
+* concurrent requests over the same facade coalesce into one
+  compiled-program invocation and slice back out per request;
+* fixed ``batch_slots`` keep every invocation on one jit shape, so a
+  multi-client run compiles once per bucket total;
+* island-ES over one shared service matches the scalar oracle on every
+  returned winner;
+* per-client metrics attribute requests/candidates/latency to the
+  tenant that paid for them;
+* ``close(drain=False)`` fails queued futures with ``ServiceClosed``
+  and later submits are refused, while clean shutdown drains.
+"""
+import threading
+
+import numpy as np
+import pytest
+import jax.random as jrandom
+
+from repro.core import Sparseloop, compile_stats, matmul
+from repro.core.batched import get_bucketed_model
+from repro.core.mapper import MapspaceConstraints
+from repro.core.presets import coordinate_list_design, two_level_arch
+from repro.dse import EvaluationService, ServiceClosed, run_islands
+from repro.obs import metrics
+from repro.search import MapspaceEncoding, SearchConfig, run_search
+
+WL = matmul(32, 32, 32, densities={"A": ("uniform", 0.3),
+                                   "B": ("uniform", 0.3)})
+DESIGN = coordinate_list_design(two_level_arch(buffer_kwords=8))
+CONS = MapspaceConstraints(budget=96, seed=0, spatial={1: {"n": 4}})
+#: tiny test populations must still take the batched/bucketed route
+#: (the scalar fallback would bypass the service entirely)
+BATCHED = SearchConfig(batch_threshold=1)
+
+
+def _decoded_population(n, key=0):
+    """(bucketed facade, bounds, rank_ids) for a random population —
+    the exact decode the search runner hands the service."""
+    enc = MapspaceEncoding(WL, 2, CONS)
+    pop = enc.random_population(jrandom.PRNGKey(key), n)
+    bucket, bounds, ids = enc.decode_bucketed(pop)
+    model = Sparseloop(DESIGN).bucketed_model(WL, bucket)
+    return model, bounds, ids
+
+
+# ----------------------------------------------------------------------
+# transport parity + coalescing
+# ----------------------------------------------------------------------
+def test_service_matches_direct_path_exactly():
+    model, bounds, ids = _decoded_population(12)
+    direct = model.evaluate(bounds, ids, mesh=None)
+    with EvaluationService() as svc:
+        served = svc.client("t").evaluate(model, bounds, rank_ids=ids)
+    assert set(served) == set(direct)
+    for k in direct:
+        np.testing.assert_array_equal(served[k], direct[k])
+
+
+def test_concurrent_requests_coalesce_into_one_batch():
+    model, bounds, ids = _decoded_population(16)
+    direct = model.evaluate(bounds, ids, mesh=None)
+    svc = EvaluationService(autostart=False)
+    futs = [svc.submit(model, bounds[s], rank_ids=ids[s], client=c)
+            for c, s in (("a", slice(0, 10)), ("b", slice(10, 16)))]
+    assert svc.drain_once() == 2
+    st = svc.stats()
+    assert (st["requests"], st["batches"]) == (2, 1)
+    assert st["coalesced_requests"] == 2
+    res_a, res_b = futs[0].result(1), futs[1].result(1)
+    for k in direct:
+        np.testing.assert_array_equal(res_a[k], direct[k][:10])
+        np.testing.assert_array_equal(res_b[k], direct[k][10:])
+    svc.close()
+
+
+def test_batch_slots_pin_one_jit_shape():
+    # differently-sized requests (5, 11, then 16) through a slotted
+    # service must reuse ONE compiled shape: pad short, split long
+    model, bounds, ids = _decoded_population(16)
+    direct = model.evaluate(bounds, ids, mesh=None)    # warm the program
+    with compile_stats.track() as st:
+        with EvaluationService(batch_slots=8, autostart=False) as svc:
+            c = svc.client("shapes")
+            r5 = c.evaluate(model, bounds[:5], rank_ids=ids[:5])
+            r11 = c.evaluate(model, bounds[5:], rank_ids=ids[5:])
+            r16 = c.evaluate(model, bounds, rank_ids=ids)
+    assert st.compiles == 1                 # the (8, slots) shape, once
+    for k in direct:
+        np.testing.assert_array_equal(
+            np.concatenate([r5[k], r11[k]]), direct[k])
+        np.testing.assert_array_equal(r16[k], direct[k])
+
+
+def test_max_batch_splits_preserve_request_boundaries():
+    model, bounds, ids = _decoded_population(16)
+    direct = model.evaluate(bounds, ids, mesh=None)
+    svc = EvaluationService(max_batch=6, autostart=False)
+    futs = [svc.submit(model, bounds[i:i + 4], rank_ids=ids[i:i + 4],
+                       client=f"c{i}") for i in range(0, 16, 4)]
+    svc.drain_once()
+    assert svc.stats()["batches"] == 4      # 4-candidate requests never
+    for i, fut in enumerate(futs):          # straddle the 6-cap
+        for k in direct:
+            np.testing.assert_array_equal(
+                fut.result(1)[k], direct[k][i * 4:(i + 1) * 4])
+    svc.close()
+
+
+def test_evaluation_errors_fan_out_to_every_future():
+    class Boom:
+        kind = "boom"
+
+        def evaluate(self, *a, **k):
+            raise ValueError("broken model")
+
+    model = Boom()
+    svc = EvaluationService(autostart=False)
+    futs = [svc.submit(model, np.ones((3, 2)), client=c)
+            for c in ("a", "b")]
+    svc.drain_once()
+    for fut in futs:
+        with pytest.raises(ValueError, match="broken model"):
+            fut.result(1)
+    svc.close()
+
+
+# ----------------------------------------------------------------------
+# multi-tenant accounting
+# ----------------------------------------------------------------------
+def test_per_client_metrics_attribute_tenants():
+    metrics.reset()
+    model, bounds, ids = _decoded_population(10)
+    with EvaluationService() as svc:
+        svc.client("alice").evaluate(model, bounds[:7], rank_ids=ids[:7])
+        svc.client("bob").evaluate(model, bounds[7:], rank_ids=ids[7:])
+        alice = svc.client_metrics("alice")
+        bob = svc.client("bob").metrics()
+    assert alice["dse.client.alice.requests"]["value"] == 1
+    assert alice["dse.client.alice.candidates"]["value"] == 7
+    assert bob["dse.client.bob.candidates"]["value"] == 3
+    assert alice["dse.client.alice.request_latency_s"]["count"] == 1
+    assert not any("bob" in k for k in alice)
+    snap = metrics.snapshot()
+    assert snap["dse.candidates"]["value"] == 10
+    assert snap["dse.request_latency_s"]["count"] == 2
+
+
+# ----------------------------------------------------------------------
+# search integration
+# ----------------------------------------------------------------------
+def test_run_search_through_service_matches_direct():
+    direct = run_search(DESIGN, WL, CONS, strategy="es", key=3,
+                        pop_size=8, generations=3, mesh=None,
+                        config=BATCHED)
+    with EvaluationService() as svc:
+        served = run_search(DESIGN, WL, CONS, strategy="es", key=3,
+                            pop_size=8, generations=3, config=BATCHED,
+                            service=svc.client("search"))
+        assert svc.stats()["requests"] >= 3     # actually routed here
+    assert served.best is not None
+    assert served.best.edp == pytest.approx(direct.best.edp, rel=1e-9)
+    assert served.evaluated == direct.evaluated
+
+
+def test_islands_share_programs_and_validate_winners():
+    metrics.reset()
+    with compile_stats.track() as st:
+        res = run_islands(DESIGN, WL, CONS, n_islands=3, strategy="es",
+                          key=0, pop_size=8, generations=4,
+                          migrate_every=2, config=BATCHED)
+    # one free-permutation bucket -> one compile for ALL islands
+    assert st.compiles <= 1
+    assert len(res.per_island) == 3 and len(res.logs) == 3
+    assert res.evaluations == 3 * 8 * 4
+    assert res.service_stats["clients"] == ["island0", "island1",
+                                            "island2"]
+    oracle = Sparseloop(DESIGN)
+    for r in res.per_island:
+        assert r.best is not None
+        ev = oracle.evaluate(WL, r.best_nest)
+        assert ev.result.valid
+        assert ev.edp == pytest.approx(r.best.edp, rel=1e-6)
+    assert res.best.best.edp == min(r.best.edp for r in res.per_island)
+    # every island shows up as a tenant in the metrics registry
+    snap = metrics.snapshot()
+    for i in range(3):
+        assert snap[f"dse.client.island{i}.requests"]["value"] >= 4
+
+
+def test_island_migration_disabled_still_runs():
+    res = run_islands(DESIGN, WL, CONS, n_islands=2, strategy="es",
+                      key=1, pop_size=8, generations=2, migrate_every=0,
+                      config=BATCHED)
+    assert res.best.best is not None
+    assert all(len(log.records) == 2 for log in res.logs)
+
+
+# ----------------------------------------------------------------------
+# shutdown semantics
+# ----------------------------------------------------------------------
+def test_close_without_drain_fails_pending_and_refuses_submits():
+    model, bounds, ids = _decoded_population(6)
+    svc = EvaluationService(autostart=False)
+    fut = svc.submit(model, bounds, rank_ids=ids, client="late")
+    svc.close(drain=False)
+    with pytest.raises(ServiceClosed):
+        fut.result(1)
+    with pytest.raises(ServiceClosed):
+        svc.submit(model, bounds, rank_ids=ids)
+
+
+def test_close_with_drain_serves_pending():
+    model, bounds, ids = _decoded_population(6)
+    direct = model.evaluate(bounds, ids, mesh=None)
+    svc = EvaluationService(autostart=False)
+    fut = svc.submit(model, bounds, rank_ids=ids)
+    svc.close(drain=True)
+    res = fut.result(1)
+    np.testing.assert_array_equal(res["edp"], direct["edp"])
+
+
+def test_context_exit_drains_in_flight_requests():
+    model, bounds, ids = _decoded_population(6)
+    with EvaluationService() as svc:
+        fut = svc.submit(model, bounds, rank_ids=ids)
+    assert fut.done()
+    assert len(fut.result(0)["edp"]) == 6
+
+
+# ----------------------------------------------------------------------
+# cache thread-safety (the service's precondition)
+# ----------------------------------------------------------------------
+def test_concurrent_facade_construction_is_safe_and_shared():
+    enc = MapspaceEncoding(WL, 2, CONS)
+    out, errs = [None] * 8, []
+
+    def build(i):
+        try:
+            out[i] = get_bucketed_model(DESIGN, WL, enc.bucket)
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=build, args=(i,))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert all(m is out[0] for m in out)    # content-cached: ONE facade

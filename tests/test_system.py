@@ -99,3 +99,91 @@ def test_dryrun_sweep_results_have_no_errors():
     assert not bad, f"dry-run failures: {bad}"
     skips = [r for r in recs if r["status"] == "skipped"]
     assert all("full-attention" in r["reason"] for r in skips)
+
+
+# ----------------------------------------------------------------------
+# ServeLoop lifecycle: the continuous-batching loop as an object
+# ----------------------------------------------------------------------
+def _serve_loop(requests, batch=2, gen=6, seed=0):
+    import jax
+    from repro.configs import get_config
+    from repro.launch.serve import ServeLoop
+    from repro.models import get_api
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    api = get_api(cfg)
+    params, _ = api.init(cfg, jax.random.PRNGKey(seed))
+    loop = ServeLoop(api, cfg, params, batch=batch, prompt_len=8,
+                     gen=gen, seed=seed)
+    rng = np.random.default_rng(seed)
+    for r in range(requests):
+        loop.submit(r, rng.integers(1, cfg.vocab_size, size=8))
+    return loop
+
+
+def test_serve_loop_metrics_under_concurrent_clients():
+    """Queue-depth gauge and request-latency histogram track the five
+    clients through admission, refill, and completion."""
+    from repro.obs import metrics
+    metrics.reset()
+    loop = _serve_loop(5, batch=2)
+    depth = metrics.gauge("serve.queue_depth")
+    assert depth.value == 5          # all five queued before the wave
+    loop.start()
+    assert depth.value == 3 and loop.active == 2
+    loop.drain()
+    assert depth.value == 0 and loop.pending == 0
+    assert depth.max == 5
+    snap = metrics.snapshot()
+    lat = snap["serve.request_latency_s"]
+    assert lat["count"] == loop.served >= 4
+    assert loop.latencies and min(loop.latencies) > 0
+    # later submissions waited in the queue at least as long
+    assert max(loop.latencies) >= min(loop.latencies)
+    assert snap["serve.tokens"]["value"] == sum(
+        len(v) for v in loop.outputs.values())
+
+
+def test_serve_loop_cancellation_mid_batch():
+    """A queued request cancels instantly; a decoding request frees its
+    slot at the next step (refilled from the queue, no latency row)."""
+    from repro.obs import metrics
+    metrics.reset()
+    loop = _serve_loop(4, batch=2, gen=6)
+    assert loop.cancel(3)            # still queued: dropped outright
+    loop.start()
+    assert loop.step()
+    assert loop.cancel(0)            # mid-batch: slot frees next step
+    assert not loop.cancel(99)       # unknown
+    loop.drain()
+    assert len(loop.outputs[0]) < 6      # partial output kept
+    assert len(loop.outputs[3]) == 0     # never admitted
+    assert len(loop.outputs[1]) == len(loop.outputs[2]) == 6
+    assert loop.served == 2
+    snap = metrics.snapshot()
+    assert snap["serve.request_latency_s"]["count"] == 2
+    assert not loop.cancel(1)        # already finished
+
+
+def test_serve_loop_shutdown_drains_in_flight():
+    """shutdown(drain=True) finishes the admitted slots and refuses new
+    work; queued-but-unstarted requests stay unserved."""
+    loop = _serve_loop(6, batch=2, gen=6)
+    loop.start()
+    assert loop.step()
+    loop.shutdown(drain=True)
+    assert loop.served == 2 and loop.active == 0
+    assert len(loop.outputs[0]) == len(loop.outputs[1]) == 6
+    assert loop.pending == 4         # never admitted after close
+    assert all(len(loop.outputs[r]) == 0 for r in range(2, 6))
+    with pytest.raises(RuntimeError):
+        loop.submit(7, np.ones(8, np.int32))
+
+
+def test_serve_loop_shutdown_abandons_without_drain():
+    loop = _serve_loop(3, batch=2, gen=6)
+    loop.start()
+    assert loop.step()
+    loop.shutdown(drain=False)
+    assert loop.active == 0 and loop.served == 0
+    assert not loop.step()           # idle and closed
+    assert all(len(v) <= 1 for v in loop.outputs.values())
