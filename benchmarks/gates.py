@@ -86,6 +86,13 @@ GATES: tuple[Gate, ...] = (
          "share bucket programs (compiles <= buckets, not clients x "
          "buckets), winners match the scalar oracle, and throughput "
          "beats 4 isolated runners; writes BENCH_service.json"),
+    Gate("fused-smoke",
+         ("-m", "benchmarks.bench_fused", "--fused-smoke"), 900,
+         "device-resident lax.scan ES: >= 3x warm gens/s vs the host "
+         "loop, ONE scan compile per (bucket, chunk-shape), zero "
+         "scalar evals, same-key re-run byte-identical, winner "
+         "oracle-confirmed, hybrid ES+SGD <= pure ES at equal budget; "
+         "writes BENCH_fused.json"),
 )
 
 

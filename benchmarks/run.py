@@ -152,7 +152,7 @@ def registry() -> list[tuple[str, object]]:
                    bench_fig1_formats, bench_fig11_scnn,
                    bench_fig12_eyerissv2, bench_fig13_dstc,
                    bench_fig15_16_stc_study, bench_fig17_codesign,
-                   bench_fleet, bench_kernels, bench_obs,
+                   bench_fleet, bench_fused, bench_kernels, bench_obs,
                    bench_search_convergence, bench_service,
                    bench_stc_exact, bench_table5_cphc,
                    bench_table7_compression, bench_vmapper)
@@ -175,6 +175,7 @@ def registry() -> list[tuple[str, object]]:
         ("fleet", bench_fleet),
         ("obs", bench_obs),
         ("dse_service", bench_service),
+        ("fused_search", bench_fused),
     ]
 
 

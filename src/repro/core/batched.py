@@ -505,6 +505,11 @@ class _ProgramRecord:
     fn: object                         # jit(vmap(single, (0, None)))
     sharded_fns: dict = dataclasses.field(default_factory=dict)
     compiled: set = dataclasses.field(default_factory=set)
+    #: jitted value_and_grad variants of ``single``, keyed by
+    #: (purpose, metric, surrogate, tau) — built lazily by
+    #: ``BucketedModel.evaluate_with_arch_grad`` and shared exactly like
+    #: ``fn`` (the closure only reads structural attributes)
+    grad_fns: dict = dataclasses.field(default_factory=dict)
 
     def note_compile(self, shape_key) -> bool:
         """First evaluation at a shape is when jit actually compiles.
@@ -1160,6 +1165,7 @@ class _TracedNestModel:
         valid = jnp.asarray(True)
         energy = 0.0
         worst_cycles = 0.0
+        occupancies = []
         for s in range(S):
             cap, bw, e_read, e_write, e_gated, e_meta = (
                 storage[s, c] for c in range(len(STORAGE_FIELDS)))
@@ -1174,6 +1180,7 @@ class _TracedNestModel:
                 wg = wg + st["fills"].gated + st["updates"].gated
                 meta = meta + st["meta_reads"] + st["meta_fills"]
                 occ = occ + st["occ_max"]
+            occupancies.append(occ * jnp.ones(()))
             if self.check_capacity:
                 # traced capacity: an infinite level passes trivially,
                 # matching the scalar engine's skip-inf-levels behavior
@@ -1202,6 +1209,10 @@ class _TracedNestModel:
             "compute_gated": compute_gated,
             "compute_skipped": compute_skipped,
             "dense_computes": dense_computes * jnp.ones(()),
+            # per-storage-level words held at peak (innermost-first):
+            # what the capacity check compares against, exposed so the
+            # differentiable path can build a smooth capacity surrogate
+            "occupancy": jnp.stack(occupancies),
         }
 
 
@@ -1321,6 +1332,109 @@ class BucketedModel(_TracedNestModel):
         b, ids, ap = args
         oh = ids[:, None] == jnp.arange(len(self.ranks))
         return self._single(b, oh, wp, ap)
+
+    # ------------------------------------------------------------------
+    def traced_single(self, b, rank_ids, wp_leaves, ap_rows):
+        """The shared program's un-vmapped traced step, exposed for
+        external composition: ``search.fused`` embeds it inside its
+        ``lax.scan`` body so the whole generation loop (decode ->
+        evaluate -> select) is ONE program.  ``b`` / ``rank_ids`` are
+        per-candidate (num_slots,) rows, ``wp_leaves`` the bound
+        workload leaves (:meth:`_bind_params`), ``ap_rows`` the
+        ``(storage (S, F), compute (4,))`` tuple."""
+        return self._prog.single((b, rank_ids, ap_rows), wp_leaves)
+
+    def _arch_grad_fn(self, metric: str, surrogate: bool, tau: float):
+        """Jitted vmapped ``value_and_grad`` of the traced step w.r.t.
+        the per-candidate arch rows, cached on the shared program record
+        (the closure reads only structural state, exactly like ``fn``)."""
+        key = ("arch_grad", metric, surrogate, tau)
+        with _CACHE_LOCK:
+            fn = self._prog.grad_fns.get(key)
+            if fn is not None:
+                return fn
+            single = self._prog.single
+
+            def loss_one(ap_rows, b, ids, wp):
+                out = single((b, ids, ap_rows), wp)
+                if not surrogate:
+                    return out[metric], out
+                # smooth capacity surrogate: log-metric plus a softplus
+                # barrier per storage level.  z = (occ - cap)/(tau*cap)
+                # ramps the penalty as occupancy approaches capacity;
+                # infinite-capacity levels contribute softplus(-30) ~ 0
+                # (jnp.where on both branches keeps the grad NaN-free)
+                storage_rows = ap_rows[0]
+                cap = storage_rows[:, STORAGE_FIELDS.index(
+                    "capacity_words")]
+                finite = jnp.isfinite(cap)
+                safe = jnp.where(finite, cap, 1.0)
+                z = jnp.where(
+                    finite, (out["occupancy"] - safe) / (tau * safe),
+                    -30.0)
+                loss = (jnp.log(jnp.maximum(out[metric], 1e-300))
+                        + jnp.sum(jax.nn.softplus(z)))
+                return loss, out
+
+            fn = jax.jit(jax.vmap(
+                jax.value_and_grad(loss_one, argnums=0, has_aux=True),
+                in_axes=(0, 0, 0, None)))
+            self._prog.grad_fns[key] = fn
+            compile_stats.record_program(f"{self.kind}_grad")
+            return fn
+
+    def evaluate_with_arch_grad(self, bounds, rank_ids,
+                                arch_params: ArchParams | None = None, *,
+                                metric: str = "edp",
+                                surrogate: bool = False,
+                                tau: float = 0.05,
+                                workload_params: WorkloadParams
+                                | None = None) -> dict[str, np.ndarray]:
+        """Like :meth:`evaluate`, plus the gradient of a per-candidate
+        loss w.r.t. the arch scalar rows (ROADMAP item 1: the model is
+        differentiable end to end, so this is one ``value_and_grad``
+        pass, not a finite-difference sweep).
+
+        ``surrogate=False``: loss is the raw ``metric`` — grads match
+        central finite differences of the scalar oracle.
+        ``surrogate=True``: loss is ``log(metric)`` plus a smooth
+        softplus capacity barrier (temperature ``tau``) — the
+        differentiable stand-in for the hard validity mask that the
+        hybrid ES+SGD step descends (the hard mask still gates
+        fitness).  Returns the :meth:`evaluate` dict extended with
+        ``loss`` (C,), ``grad_storage`` (C, S, F) and ``grad_compute``
+        (C, 4)."""
+        bounds = np.asarray(bounds)
+        rank_ids = np.asarray(rank_ids)
+        if bounds.ndim != 2 or bounds.shape[1] != self.num_slots:
+            raise ValueError(
+                f"bounds must be (C, {self.num_slots}), "
+                f"got {bounds.shape}")
+        if rank_ids.shape != bounds.shape:
+            raise ValueError(
+                f"rank_ids shape {rank_ids.shape} != bounds shape "
+                f"{bounds.shape}")
+        with enable_x64():
+            wp = self._bind_params(workload_params)
+            storage, comp = self._bind_arch(arch_params, len(bounds))
+            compile_stats.record_batched_evals(
+                len(bounds), shared=self.program_shared)
+            fn = self._arch_grad_fn(metric, surrogate, tau)
+
+            def flat(args, w):
+                b, ids, ap = args
+                (loss, out), grads = fn(ap, b, ids, w)
+                return {**out, "loss": loss, "grad_storage": grads[0],
+                        "grad_compute": grads[1]}
+
+            out = self._run(
+                flat,
+                (jnp.asarray(bounds, jnp.float64),
+                 jnp.asarray(rank_ids, jnp.int64),
+                 (jnp.asarray(storage), jnp.asarray(comp))), wp,
+                ("arch_grad", metric, surrogate, tau, bounds.shape),
+                len(bounds))
+        return out
 
     # ------------------------------------------------------------------
     def evaluate(self, bounds, rank_ids, mesh=None,
@@ -1447,6 +1561,21 @@ def get_bucketed_model(design, workload: Workload, bucket: TemplateBucket,
                       check_capacity, caps)
 
 
+#: extra cache-clear callbacks registered by downstream modules whose
+#: caches hold references into _PROGRAM_CACHE records (e.g. the fused
+#: search-program cache) — cleared together so a clear_caches() test
+#: hook can never leave a dangling program alive through a fused cache
+_EXTRA_CACHE_CLEARERS: list = []
+
+
+def register_cache_clearer(fn) -> None:
+    """Register a zero-arg callback to run inside :func:`clear_caches`
+    (idempotent per function object)."""
+    with _CACHE_LOCK:
+        if fn not in _EXTRA_CACHE_CLEARERS:
+            _EXTRA_CACHE_CLEARERS.append(fn)
+
+
 def clear_caches() -> None:
     """Drop the facade and compiled-program caches (a testing hook:
     exact compile-count assertions otherwise depend on process-global
@@ -1454,6 +1583,8 @@ def clear_caches() -> None:
     with _CACHE_LOCK:
         _MODEL_CACHE.clear()
         _PROGRAM_CACHE.clear()
+        for fn in _EXTRA_CACHE_CLEARERS:
+            fn()
 
 
 def group_by_template(nests) -> dict[NestTemplate, list[int]]:

@@ -160,9 +160,12 @@ class Sparseloop:
 
         def scatter(out, idxs, res):
             for k, v in res.items():
+                v = np.asarray(v)
                 if k not in out:
+                    # some columns carry trailing axes (e.g. per-level
+                    # occupancy is (C, S))
                     out[k] = np.zeros(
-                        len(nests),
+                        (len(nests),) + v.shape[1:],
                         dtype=bool if k == "valid" else np.float64)
                 out[k][idxs] = v
 

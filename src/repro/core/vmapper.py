@@ -133,5 +133,8 @@ def search(M, N, K, dA, dB, arch, design: VDesign,
     cand = candidate_factors(M, N, K)
     metrics = evaluate_batch(cand, M, N, K, dA, dB, arch, design)
     best = int(np.argmin(metrics[objective]))
-    return cand[best], {k: float(v[best]) for k, v in metrics.items()}, \
+    # per-candidate scalars only: columns with trailing axes (per-level
+    # occupancy is (C, S)) aren't summary metrics
+    return cand[best], {k: float(v[best]) for k, v in metrics.items()
+                        if np.ndim(v[best]) == 0}, \
         len(cand)

@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import warnings
 
 import numpy as np
 
@@ -40,7 +41,7 @@ from ..search.encoding import (CoSearchEncoding, DesignSpace,
 from ..search.log import GenerationRecord, SearchLog
 from ..search.runner import (ARCHIVE_SIZE, METRICS, PopulationEvaluator,
                              SearchConfig)
-from ..search.strategies import make_strategy
+from ..search.strategies import EvolutionStrategy, make_strategy
 from .service import EvaluationService
 
 
@@ -155,6 +156,54 @@ def _island_worker(island: int, key, enc, evaluate: PopulationEvaluator,
     out["n_valid"] = n_valid
 
 
+def _island_worker_fused(island: int, key, enc,
+                         evaluate: PopulationEvaluator, fp, strat,
+                         generations: int, metric: str,
+                         board: _MigrantBoard, migrate_every: int,
+                         n_migrants: int, chunk: int, out: dict) -> None:
+    """One island's fused loop: whole generation chunks run as one
+    compiled ``lax.scan`` dispatch routed through the shared service's
+    evaluator thread (``ServiceClient.run_fused``).  The scan carry
+    stays device-resident across chunks; ring migration happens at
+    chunk boundaries by folding the neighbor's emigrants into the carry
+    (``FusedProgram.inject`` — the same (mu + lambda) fold the host
+    path gets from ``strategy.tell``)."""
+    from ..search.fused import ChunkAbsorber
+
+    log = SearchLog(strategy=strat.name, metric=metric,
+                    workload=evaluate.workload.name,
+                    design=(evaluate.model.design.name
+                            or evaluate.model.design.arch.name))
+    absorber = ChunkAbsorber(metric, ARCHIVE_SIZE)
+    carry = fp.init_carry(key)
+    done = 0
+    with obs.span("dse.island", island=island, strategy=strat.name,
+                  generations=generations, fused=True):
+        while done < generations:
+            c = min(chunk, generations - done)
+            carry, ys = evaluate.service.run_fused(
+                lambda carry=carry, c=c: fp.invoke_chunk(carry, c))
+            absorber.absorb(ys, log)
+            done += c
+            if migrate_every > 0 and done < generations:
+                genomes = ys["genomes"][-1]
+                fitness = ys["fitness"][-1]
+                fin = np.isfinite(fitness)
+                if fin.any():
+                    order = np.argsort(
+                        np.where(fin, fitness, np.inf),
+                        kind="stable")[:n_migrants]
+                    board.publish(island, genomes[order],
+                                  fitness[order])
+                migrants = board.take_for(island)
+                if migrants is not None:
+                    carry = fp.inject(carry, *migrants)
+    out["log"] = log
+    out["archive"] = (absorber.archive_fit, absorber.archive_gen)
+    out["n_eval"] = absorber.n_eval
+    out["n_valid"] = absorber.n_valid
+
+
 def run_islands(design, workload: Workload,
                 cons: MapspaceConstraints | None = None, *,
                 n_islands: int = 4,
@@ -168,6 +217,9 @@ def run_islands(design, workload: Workload,
                 config: SearchConfig | None = None,
                 design_space: DesignSpace | None = None,
                 service: EvaluationService | None = None,
+                fused: bool = False,
+                sgd_lr: float = 0.0,
+                sgd_tau: float = 0.05,
                 **strategy_options) -> IslandResult:
     """Run ``n_islands`` concurrent ask/tell searches through one shared
     :class:`EvaluationService`.
@@ -179,6 +231,17 @@ def run_islands(design, workload: Workload,
     Migration is asynchronous (see :class:`_MigrantBoard`); pass
     ``migrate_every=0`` to disable it.  When ``service`` is None, a
     private one is created and closed on exit.
+
+    ``fused=True`` runs each eligible island device-resident: the
+    whole ask/tell loop compiles into one ``lax.scan`` program SHARED
+    by every island (same encoding + strategy => same
+    ``FusedProgram``, so the fleet pays ONE scan compile total), each
+    island's chunk dispatches serialize through the service's
+    evaluator thread, and ring migration folds emigrants into the
+    device carry at chunk boundaries.  Ineligible setups (non-ES
+    strategies, scalar-only density models, non-traced design knobs)
+    fall back to the host workers with a warning.  ``sgd_lr`` /
+    ``sgd_tau`` are the hybrid ES+SGD knobs (see ``run_search``).
     """
     import jax.random as jrandom
 
@@ -214,19 +277,53 @@ def run_islands(design, workload: Workload,
                             service=service.client(f"island{i}"))
         for i in range(n_islands)
     ]
+    from ..search.fused import fused_supported, get_fused_program
+    use_fused = (fused
+                 and all(isinstance(s, EvolutionStrategy) for s in strats)
+                 and evaluators[0].batched and config.bucketed
+                 and enc.genome_size > 0
+                 and strats[0].pop_size >= max(1, config.batch_threshold)
+                 and fused_supported(enc))
+    if fused and not use_fused:
+        warnings.warn(
+            "fused=True requested but this island run is not "
+            "fused-eligible (needs an EvolutionStrategy on the bucketed "
+            "batched path with traced design knobs); using the host "
+            "ask/tell workers", stacklevel=2)
+    fp = None
+    if use_fused:
+        # ONE FusedProgram for the whole fleet: islands differ only in
+        # their carry (their population + key), so they share the scan
+        # compile the same way host islands share the bucket compile
+        bm = evaluators[0].model.bucketed_model(
+            workload, enc.bucket, check_capacity=check_capacity)
+        fp = get_fused_program(bm, enc, strats[0], metric=metric,
+                               sgd_lr=sgd_lr, sgd_tau=sgd_tau)
+    chunk = (migrate_every if migrate_every > 0
+             else max(1, config.fused_chunk))
+
     outs: list[dict] = [{} for _ in range(n_islands)]
     threads = []
     t0 = time.perf_counter()
     try:
         with obs.span("dse.islands", islands=n_islands,
-                      strategy=strategy, generations=generations):
+                      strategy=strategy, generations=generations,
+                      fused=use_fused):
             for i in range(n_islands):
                 strat = strats[i]
+                if use_fused:
+                    args = (i, jrandom.fold_in(base_key, i), enc,
+                            evaluators[i], fp, strat, generations,
+                            metric, board, migrate_every, n_migrants,
+                            chunk, outs[i])
+                    target = _island_worker_fused
+                else:
+                    args = (i, jrandom.fold_in(base_key, i), enc,
+                            evaluators[i], strat, generations, metric,
+                            board, migrate_every, n_migrants, outs[i])
+                    target = _island_worker
                 th = threading.Thread(
-                    target=_island_worker, name=f"dse-island{i}",
-                    args=(i, jrandom.fold_in(base_key, i), enc,
-                          evaluators[i], strat, generations, metric,
-                          board, migrate_every, n_migrants, outs[i]))
+                    target=target, name=f"dse-island{i}", args=args)
                 th.start()
                 threads.append(th)
             for th in threads:

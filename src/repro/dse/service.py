@@ -107,6 +107,26 @@ class _Request:
         return len(self.bounds)
 
 
+@dataclasses.dataclass
+class _FusedRequest:
+    """One fused-scan chunk invocation awaiting its turn on the
+    evaluator thread.
+
+    Fused searches don't decode populations on the host, so there is
+    nothing to concatenate — the value of routing them through the
+    service is serialization (the warm program caches keep a single
+    writer even when island searches run fused) and attribution (the
+    chunk lands in the same per-client ``dse.*`` accounting as
+    population requests).  ``call`` is a zero-argument closure over the
+    :class:`~repro.search.fused.FusedProgram` and its carry, returning
+    ``(carry, ys)``."""
+
+    client: str
+    call: object                        # () -> (carry, ys)
+    future: _Future
+    t_submit: float
+
+
 def _normalized_rows(ap: ArchParams, n: int) -> tuple:
     """Per-candidate (storage, compute) rows: broadcast an unbatched
     params object so requests with *different* single designs can still
@@ -162,6 +182,7 @@ class EvaluationService:
         self.batches = 0
         self.coalesced_requests = 0
         self.candidates = 0
+        self.fused_chunks = 0
         self._thread: threading.Thread | None = None
         if autostart:
             self._thread = threading.Thread(
@@ -213,6 +234,41 @@ class EvaluationService:
             f"dse.client.{client}.request_latency_s").observe(dt)
         return res
 
+    def submit_fused(self, call, client: str = "anon") -> _Future:
+        """Enqueue one fused-scan chunk (``call() -> (carry, ys)``);
+        returns a future resolving to that tuple.  Fused chunks share
+        the queue with population requests so the evaluator thread
+        stays the single owner of compiled-program invocations."""
+        fut = _Future()
+        req = _FusedRequest(client=client, call=call, future=fut,
+                            t_submit=time.perf_counter())
+        with self._cv:
+            if self._closed:
+                raise ServiceClosed("submit_fused() on a closed service")
+            self._queue.append(req)
+            self._clients.add(client)
+            metrics.gauge("dse.queue_depth").set(len(self._queue))
+            self._cv.notify_all()
+        return fut
+
+    def run_fused(self, call, client: str = "anon",
+                  timeout: float | None = None):
+        """Blocking :meth:`submit_fused` — the fused analogue of
+        :meth:`evaluate`, with the same ``dse.request`` span and
+        per-client latency accounting."""
+        t0 = time.perf_counter()
+        with obs.span("dse.request", client=client, fused=True) as sp:
+            fut = self.submit_fused(call, client=client)
+            if self._thread is None:
+                self.drain_once()
+            res = fut.result(timeout=timeout)
+            dt = time.perf_counter() - t0
+            sp.set(latency_s=dt)
+        metrics.histogram("dse.request_latency_s").observe(dt)
+        metrics.histogram(
+            f"dse.client.{client}.request_latency_s").observe(dt)
+        return res
+
     def client_metrics(self, name: str) -> dict[str, dict]:
         """This client's slice of the metrics registry — the per-tenant
         accounting snapshot (requests, candidates, latency histogram)."""
@@ -228,6 +284,7 @@ class EvaluationService:
                 "batches": self.batches,
                 "coalesced_requests": self.coalesced_requests,
                 "candidates": self.candidates,
+                "fused_chunks": self.fused_chunks,
                 "pending": len(self._queue),
                 "clients": sorted(self._clients),
             }
@@ -301,6 +358,10 @@ class EvaluationService:
         return (id(req.model), req.arch_params is None)
 
     def _serve(self, pending: list[_Request]) -> None:
+        fused = [r for r in pending if isinstance(r, _FusedRequest)]
+        pending = [r for r in pending if not isinstance(r, _FusedRequest)]
+        for req in fused:
+            self._serve_fused(req)
         groups: dict[tuple, list[_Request]] = {}
         for req in pending:
             groups.setdefault(self._group_key(req), []).append(req)
@@ -365,6 +426,25 @@ class EvaluationService:
         return {k: np.concatenate([p[k] for p in parts])
                 for k in parts[0]}
 
+    def _serve_fused(self, req: _FusedRequest) -> None:
+        """Execute one fused-scan chunk on the evaluator thread.  Fused
+        chunks never coalesce (each scan owns its carry) — the engine's
+        own ``engine.compile`` / ``engine.eval`` spans fire inside."""
+        try:
+            with obs.span("dse.fused_chunk", client=req.client):
+                res = req.call()
+        except BaseException as exc:  # noqa: BLE001 — fan the error out
+            req.future.set_exception(exc)
+            return
+        with self._cv:
+            self.requests += 1
+            self.fused_chunks += 1
+        metrics.counter("dse.requests").add(1)
+        metrics.counter("dse.fused_chunks").add(1)
+        metrics.counter(f"dse.client.{req.client}.requests").add(1)
+        metrics.counter(f"dse.client.{req.client}.fused_chunks").add(1)
+        req.future.set_result(res)
+
     def _serve_group(self, reqs: list[_Request]) -> None:
         model = reqs[0].model
         n_req = len(reqs)
@@ -427,6 +507,12 @@ class ServiceClient:
         return self.service.evaluate(
             model, bounds, rank_ids=rank_ids, arch_params=arch_params,
             client=self.name, timeout=timeout)
+
+    def run_fused(self, call, timeout: float | None = None):
+        """Route one fused-scan chunk (``call() -> (carry, ys)``)
+        through the service's evaluator thread."""
+        return self.service.run_fused(call, client=self.name,
+                                      timeout=timeout)
 
     def metrics(self) -> dict[str, dict]:
         return self.service.client_metrics(self.name)

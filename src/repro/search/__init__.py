@@ -14,13 +14,19 @@ SparseMap, arXiv 2508.12906):
     sharded across devices with ``shard_map`` when available;
     ``run_search(..., design_space=)`` co-searches (design, mapping)
     jointly through one compiled program (arch scalars are traced data)
+  * :mod:`fused`      — device-resident ES: the whole ask -> decode ->
+    evaluate -> tell generation loop as ONE compiled ``lax.scan``
+    program (``run_search(fused=True)`` / ``REPRO_SEARCH_FUSED=1``),
+    with an optional hybrid ES+SGD step on co-search design genes
   * :mod:`log`        — JSON-serializable per-generation trajectory
 
 Entry points: :func:`run_search` here, or
 ``repro.core.mapper.search(..., strategy="es")``.
 """
-from .encoding import (CoSearchEncoding, DesignSpace, MapspaceEncoding,
-                       prime_factors)
+from .encoding import (COMPUTE_KNOB_LEVEL, CoSearchEncoding, DesignSpace,
+                       MapspaceEncoding, prime_factors)
+from .fused import (ChunkAbsorber, FusedProgram, fused_supported,
+                    get_fused_program)
 from .log import GenerationRecord, SearchLog
 from .runner import (KNOWN_SEARCH_ENV, PopulationEvaluator, SearchConfig,
                      population_mesh, run_search, validate_search_env)
@@ -29,8 +35,10 @@ from .strategies import (STRATEGIES, EvolutionStrategy, HillClimb,
                          crossover, make_strategy, mutate)
 
 __all__ = [
-    "CoSearchEncoding", "DesignSpace", "MapspaceEncoding",
-    "prime_factors",
+    "COMPUTE_KNOB_LEVEL", "CoSearchEncoding", "DesignSpace",
+    "MapspaceEncoding", "prime_factors",
+    "ChunkAbsorber", "FusedProgram", "fused_supported",
+    "get_fused_program",
     "GenerationRecord", "SearchLog",
     "KNOWN_SEARCH_ENV", "PopulationEvaluator", "SearchConfig",
     "population_mesh", "run_search", "validate_search_env",

@@ -48,8 +48,8 @@ from typing import Mapping
 
 import numpy as np
 
-from ..core.arch import (Architecture, ArchParams, StorageLevel,
-                         pack_arch_params)
+from ..core.arch import (COMPUTE_FIELDS, Architecture, ArchParams,
+                         StorageLevel, pack_arch_params)
 from ..core.batched import NestTemplate, TemplateBucket
 from ..core.engine import Design
 from ..core.mapper import (MapspaceConstraints, constrained_order,
@@ -343,11 +343,19 @@ def _freeze_steps(steps) -> tuple:
                  for name, values in items)
 
 
+#: sentinel "level name" marking a knob that steps a ``ComputeLevel``
+#: scalar instead of a storage-level one (no storage level may collide
+#: with it; compute units are resolved positionally, not by name)
+COMPUTE_KNOB_LEVEL = "__compute__"
+
+
 @dataclasses.dataclass(frozen=True)
 class DesignSpace:
     """Architecture-provisioning search space: per-storage-level
     candidate *steps* for capacity and bandwidth (plus arbitrary extra
-    ``StorageLevel`` scalar fields via ``extra_steps``).
+    ``StorageLevel`` scalar fields via ``extra_steps``, and
+    ``ComputeLevel`` scalars — MAC energy, PE count, throughput width —
+    via ``compute_steps``).
 
     Each (level, knob) entry contributes ONE design gene valued in
     ``[0, len(steps))``; the spec carries no base design, so the same
@@ -365,6 +373,11 @@ class DesignSpace:
     #: StorageLevel scalar (e.g. read_energy_pj) — heterogeneous
     #: Flexagon-style design points beyond pure provisioning
     extra_steps: tuple = ()
+    #: {field_name: (choices...)} for ``ComputeLevel`` scalars
+    #: (``instances``, ``mac_energy_pj``, ``gated_energy_pj``,
+    #: ``throughput``) — one gene per field, applied to the base
+    #: design's compute unit
+    compute_steps: tuple = ()
 
     def __post_init__(self):
         object.__setattr__(self, "capacity_steps",
@@ -377,6 +390,14 @@ class DesignSpace:
         object.__setattr__(self, "extra_steps", tuple(
             ((str(lvl), str(field)), tuple(float(v) for v in values))
             for (lvl, field), values in extra))
+        object.__setattr__(self, "compute_steps",
+                           _freeze_steps(self.compute_steps))
+        valid_compute = set(COMPUTE_FIELDS)
+        for field, _ in self.compute_steps:
+            if field not in valid_compute:
+                raise ValueError(
+                    f"unknown ComputeLevel field {field!r}; compute "
+                    f"knobs must be one of {sorted(valid_compute)}")
         for field, lvl, steps in self.knobs:
             if not steps:
                 raise ValueError(f"empty step list for {field} of "
@@ -385,13 +406,17 @@ class DesignSpace:
     @property
     def knobs(self) -> tuple[tuple[str, str, tuple[float, ...]], ...]:
         """(field_name, level_name, steps) per gene — capacity genes
-        first, then bandwidth, then extras (construction order)."""
+        first, then bandwidth, then extras, then compute knobs (with
+        the :data:`COMPUTE_KNOB_LEVEL` sentinel as their level name), in
+        construction order."""
         return tuple(
             [("capacity_words", n, s) for n, s in self.capacity_steps]
             + [("bandwidth_words_per_cycle", n, s)
                for n, s in self.bandwidth_steps]
             + [(field, lvl, s)
-               for (lvl, field), s in self.extra_steps])
+               for (lvl, field), s in self.extra_steps]
+            + [(field, COMPUTE_KNOB_LEVEL, s)
+               for field, s in self.compute_steps])
 
     @property
     def num_genes(self) -> int:
@@ -421,8 +446,15 @@ class DesignSpace:
             raise ValueError(f"expected {self.num_genes} design genes, "
                              f"got {len(genes)}")
         overrides: dict[str, dict[str, float]] = {}
+        compute_ov: dict[str, float | int] = {}
         names = {lv.name for lv in base.levels}
         for g, (field, lvl, steps) in zip(genes, self.knobs):
+            if lvl == COMPUTE_KNOB_LEVEL:
+                v = steps[int(g)]
+                # ComputeLevel.instances is an int field; steps are
+                # canonicalized to float, so cast it back
+                compute_ov[field] = int(v) if field == "instances" else v
+                continue
             if lvl not in names:
                 raise ValueError(f"DesignSpace level {lvl!r} not in "
                                  f"architecture {base.name!r} "
@@ -431,7 +463,9 @@ class DesignSpace:
         levels = tuple(
             self._replace_level(lv, overrides[lv.name])
             if lv.name in overrides else lv for lv in base.levels)
-        return dataclasses.replace(base, levels=levels)
+        compute = (dataclasses.replace(base.compute, **compute_ov)
+                   if compute_ov else base.compute)
+        return dataclasses.replace(base, levels=levels, compute=compute)
 
     @staticmethod
     def _replace_level(lv, ov: dict) -> "StorageLevel":

@@ -28,9 +28,11 @@ class GenerationRecord:
     best_energy_pj: float
     best_edp: float
     #: wall-clock seconds this generation took (ask + evaluate + tell +
-    #: archive maintenance); 0.0 when loaded from a pre-flight-recorder
-    #: JSON
-    wall_time_s: float = 0.0
+    #: archive maintenance); ``None`` when the generation ran inside a
+    #: compiled scan (fused search) where per-generation wall time is
+    #: unmeasurable — chunk-level timing lives in ``SearchLog.timing``
+    #: instead; 0.0 when loaded from a pre-flight-recorder JSON
+    wall_time_s: float | None = 0.0
 
     @staticmethod
     def from_dict(d: dict[str, Any]) -> "GenerationRecord":
@@ -70,7 +72,11 @@ class SearchLog:
 
     @property
     def wall_time_s(self) -> float:
-        return sum(r.wall_time_s for r in self.records)
+        """Sum of the measurable per-generation wall times (fused-scan
+        generations carry ``None`` and are skipped — their cost is
+        attributed at chunk level in :attr:`timing`)."""
+        return sum(r.wall_time_s for r in self.records
+                   if r.wall_time_s is not None)
 
     def trajectory(self, field: str = "best_fitness") -> list[float]:
         """Per-generation series of ``field``.  Only the optimized

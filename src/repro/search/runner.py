@@ -65,7 +65,7 @@ from ..core.mapper import MapspaceConstraints, SearchResult, _validated_result
 from ..core.workload import Workload
 from .encoding import CoSearchEncoding, DesignSpace, MapspaceEncoding
 from .log import GenerationRecord, SearchLog
-from .strategies import Strategy, make_strategy
+from .strategies import EvolutionStrategy, Strategy, make_strategy
 
 METRICS = ("edp", "cycles", "energy_pj")
 
@@ -102,6 +102,10 @@ KNOWN_SEARCH_ENV = {
         "bucketed dispatch toggle (SearchConfig.bucketed)",
     "REPRO_SEARCH_DEVICES":
         "simulated device count (repro.launch.hillclimb)",
+    "REPRO_SEARCH_FUSED":
+        "device-resident fused ES scan toggle (SearchConfig.fused)",
+    "REPRO_SEARCH_FUSED_CHUNK":
+        "generations per fused scan dispatch (SearchConfig.fused_chunk)",
 }
 
 _TRUE_WORDS = frozenset({"1", "true", "yes", "on"})
@@ -160,6 +164,11 @@ class SearchConfig:
       (huge value => everything scalar; 0/1 => everything batched).
     * ``REPRO_SEARCH_BUCKETED`` — "0"/"false" disables the bucketed
       route (population falls back to per-template grouping).
+    * ``REPRO_SEARCH_FUSED`` — "1"/"true" turns on the device-resident
+      fused ES scan (``search.fused``) for eligible runs; the host
+      ask/tell loop stays the default and the fallback.
+    * ``REPRO_SEARCH_FUSED_CHUNK`` — generations per fused scan
+      dispatch (the ``lax.scan`` length each chunk compiles for).
 
     Values are validated rather than silently defaulted: a malformed
     integer raises, a non-canonical boolean warns (and is treated as
@@ -172,6 +181,10 @@ class SearchConfig:
                                          BATCH_THRESHOLD))
     bucketed: bool = dataclasses.field(
         default_factory=lambda: _env_bool("REPRO_SEARCH_BUCKETED", True))
+    fused: bool = dataclasses.field(
+        default_factory=lambda: _env_bool("REPRO_SEARCH_FUSED", False))
+    fused_chunk: int = dataclasses.field(
+        default_factory=lambda: _env_int("REPRO_SEARCH_FUSED_CHUNK", 16))
 
     def __post_init__(self) -> None:
         validate_search_env()
@@ -280,6 +293,98 @@ class PopulationEvaluator:
         return out
 
 
+def _run_host(evaluate: PopulationEvaluator, enc, strat, key,
+              generations: int, metric: str, log: SearchLog):
+    """The host ask/tell generation loop (the default path): per-gen
+    numpy strategy step + one batched evaluation.  Returns the archive
+    and counters the shared oracle-validation walk consumes."""
+    state = strat.init(key, enc)
+    archive_fit: list[float] = []
+    archive_gen: list[np.ndarray] = []
+    seen: set[bytes] = set()
+    best = {"fitness": np.inf, "cycles": np.inf, "energy_pj": np.inf,
+            "edp": np.inf}
+    n_eval = n_valid = 0
+    for gen in range(generations):
+        t_gen0 = time.perf_counter()
+        with obs.span("search.generation", generation=gen) as sp:
+            genomes = enc.repair(strat.ask(state, enc))
+            res = evaluate(genomes)
+            fitness = np.where(res["valid"], res[metric], np.inf)
+            strat.tell(state, enc, genomes, fitness)
+
+            n_eval += len(genomes)
+            n_valid += int(res["valid"].sum())
+            i = int(np.argmin(fitness))
+            if fitness[i] < best["fitness"]:
+                best = {"fitness": float(fitness[i]),
+                        "cycles": float(res["cycles"][i]),
+                        "energy_pj": float(res["energy_pj"][i]),
+                        "edp": float(res["edp"][i])}
+            for j in np.argsort(fitness,
+                                kind="stable")[:ARCHIVE_SIZE]:
+                if not np.isfinite(fitness[j]):
+                    break
+                b = genomes[j].tobytes()
+                if b not in seen:
+                    seen.add(b)
+                    archive_fit.append(float(fitness[j]))
+                    archive_gen.append(genomes[j].copy())
+            if len(archive_fit) > 4 * ARCHIVE_SIZE:
+                order = np.argsort(archive_fit,
+                                   kind="stable")[:ARCHIVE_SIZE]
+                archive_fit = [archive_fit[k] for k in order]
+                archive_gen = [archive_gen[k] for k in order]
+            sp.set(evaluations=len(genomes),
+                   best_fitness=best["fitness"])
+
+        log.append(GenerationRecord(
+            generation=gen, evaluations=n_eval, valid=n_valid,
+            best_fitness=best["fitness"], best_cycles=best["cycles"],
+            best_energy_pj=best["energy_pj"], best_edp=best["edp"],
+            wall_time_s=time.perf_counter() - t_gen0))
+    return archive_fit, archive_gen, n_eval, n_valid
+
+
+def _run_fused(evaluate: PopulationEvaluator, enc, strat, key,
+               generations: int, metric: str, check_capacity: bool,
+               config: SearchConfig, service, sgd_lr: float,
+               sgd_tau: float, log: SearchLog):
+    """The device-resident path: whole generation chunks run as one
+    compiled ``lax.scan`` dispatch (``search.fused``); the host only
+    absorbs each chunk's per-generation outputs into the archive.
+    Returns the same state as :func:`_run_host` plus the chunk-timing
+    rows for ``log.timing``."""
+    from .fused import ChunkAbsorber, get_fused_program
+
+    bm = evaluate.model.bucketed_model(
+        evaluate.workload, enc.bucket, check_capacity=check_capacity)
+    fp = get_fused_program(bm, enc, strat, metric=metric,
+                           sgd_lr=sgd_lr, sgd_tau=sgd_tau)
+    carry = fp.init_carry(key)
+    absorber = ChunkAbsorber(metric, ARCHIVE_SIZE)
+    chunks: list[dict] = []
+    done = 0
+    while done < generations:
+        c = min(max(1, config.fused_chunk), generations - done)
+        t0 = time.perf_counter()
+        with obs.span("search.chunk", start=done, length=c,
+                      pop_size=strat.pop_size) as sp:
+            if service is not None:
+                carry, ys = service.run_fused(
+                    lambda carry=carry, c=c: fp.invoke_chunk(carry, c))
+            else:
+                carry, ys = fp.invoke_chunk(carry, c)
+            absorber.absorb(ys, log)
+            sp.set(evaluations=absorber.n_eval,
+                   best_fitness=absorber.best["fitness"])
+        chunks.append({"start": done, "generations": c,
+                       "wall_s": time.perf_counter() - t0})
+        done += c
+    return (absorber.archive_fit, absorber.archive_gen,
+            absorber.n_eval, absorber.n_valid, chunks)
+
+
 def run_search(design, workload: Workload,
                cons: MapspaceConstraints | None = None,
                strategy: "str | Strategy" = "es", *,
@@ -293,6 +398,9 @@ def run_search(design, workload: Workload,
                log_to: SearchLog | None = None,
                design_space: DesignSpace | None = None,
                service=None,
+               fused: bool | None = None,
+               sgd_lr: float = 0.0,
+               sgd_tau: float = 0.05,
                **strategy_options) -> SearchResult:
     """Stochastic mapspace search.  Returns a ``SearchResult`` whose
     ``log`` attribute holds the per-generation trajectory.
@@ -322,6 +430,18 @@ def run_search(design, workload: Workload,
     into shared program invocations (cross-request batching), and the
     service — which owns the device mesh — does the sharding, so
     ``mesh`` is forced to None.
+
+    ``fused`` (or ``REPRO_SEARCH_FUSED=1``) runs eligible searches
+    device-resident: the whole ask -> decode -> evaluate -> tell loop
+    is one compiled ``lax.scan`` per generation chunk
+    (``search.fused``), dispatched once per ``config.fused_chunk``
+    generations.  Eligible = EvolutionStrategy + bucketed batched path;
+    anything else (hillclimb/annealing, scalar-only density models,
+    sub-threshold populations, non-traced design knobs) falls back to
+    the host loop — with a warning when ``fused=True`` was explicit.
+    ``sgd_lr > 0`` adds the hybrid ES+SGD step on co-search design
+    genes inside the scan body (log-space Lamarckian nudge against the
+    smooth capacity-surrogate loss, temperature ``sgd_tau``).
     """
     import jax.random as jrandom
 
@@ -355,62 +475,39 @@ def run_search(design, workload: Workload,
         if strat.pop_size > cons.budget > 0:
             strat = make_strategy(strat, pop_size=cons.budget)
         generations = max(1, cons.budget // max(1, strat.pop_size))
-    state = strat.init(key, enc)
+
+    from .fused import fused_supported
+    want_fused = config.fused if fused is None else fused
+    use_fused = (want_fused and isinstance(strat, EvolutionStrategy)
+                 and evaluate.batched and config.bucketed
+                 and enc.genome_size > 0
+                 and strat.pop_size >= max(1, config.batch_threshold)
+                 and fused_supported(enc))
+    if fused and not use_fused:
+        warnings.warn(
+            "fused=True requested but this run is not fused-eligible "
+            "(needs an EvolutionStrategy on the bucketed batched path "
+            "with traced design knobs); using the host loop",
+            stacklevel=2)
 
     log = log_to or SearchLog(strategy=strat.name, metric=metric,
                               workload=workload.name,
                               design=design.name or design.arch.name,
                               seed=None if seed is None else int(seed))
-    archive_fit: list[float] = []
-    archive_gen: list[np.ndarray] = []
-    seen: set[bytes] = set()
-    best = {"fitness": np.inf, "cycles": np.inf, "energy_pj": np.inf,
-            "edp": np.inf}
-    n_eval = n_valid = 0
 
     t_run0 = time.perf_counter()
     with compile_stats.track() as st, \
             obs.span("search.run", strategy=strat.name, metric=metric,
                      workload=workload.name, generations=generations,
-                     pop_size=strat.pop_size):
-        for gen in range(generations):
-            t_gen0 = time.perf_counter()
-            with obs.span("search.generation", generation=gen) as sp:
-                genomes = enc.repair(strat.ask(state, enc))
-                res = evaluate(genomes)
-                fitness = np.where(res["valid"], res[metric], np.inf)
-                strat.tell(state, enc, genomes, fitness)
-
-                n_eval += len(genomes)
-                n_valid += int(res["valid"].sum())
-                i = int(np.argmin(fitness))
-                if fitness[i] < best["fitness"]:
-                    best = {"fitness": float(fitness[i]),
-                            "cycles": float(res["cycles"][i]),
-                            "energy_pj": float(res["energy_pj"][i]),
-                            "edp": float(res["edp"][i])}
-                for j in np.argsort(fitness,
-                                    kind="stable")[:ARCHIVE_SIZE]:
-                    if not np.isfinite(fitness[j]):
-                        break
-                    b = genomes[j].tobytes()
-                    if b not in seen:
-                        seen.add(b)
-                        archive_fit.append(float(fitness[j]))
-                        archive_gen.append(genomes[j].copy())
-                if len(archive_fit) > 4 * ARCHIVE_SIZE:
-                    order = np.argsort(archive_fit,
-                                       kind="stable")[:ARCHIVE_SIZE]
-                    archive_fit = [archive_fit[k] for k in order]
-                    archive_gen = [archive_gen[k] for k in order]
-                sp.set(evaluations=len(genomes),
-                       best_fitness=best["fitness"])
-
-            log.append(GenerationRecord(
-                generation=gen, evaluations=n_eval, valid=n_valid,
-                best_fitness=best["fitness"], best_cycles=best["cycles"],
-                best_energy_pj=best["energy_pj"], best_edp=best["edp"],
-                wall_time_s=time.perf_counter() - t_gen0))
+                     pop_size=strat.pop_size, fused=use_fused):
+        if use_fused:
+            archive_fit, archive_gen, n_eval, n_valid, chunks = \
+                _run_fused(evaluate, enc, strat, key, generations,
+                           metric, check_capacity, config, service,
+                           sgd_lr, sgd_tau, log)
+        else:
+            archive_fit, archive_gen, n_eval, n_valid = _run_host(
+                evaluate, enc, strat, key, generations, metric, log)
     # run-level wall-clock attribution: where the search's seconds went
     # (compile vs warm-eval, from compile_stats' seconds counters)
     log.timing = {
@@ -419,6 +516,11 @@ def run_search(design, workload: Workload,
         "eval_s": st.eval_seconds,
         "compiles": st.compiles,
     }
+    if use_fused:
+        # honest chunk-level attribution: per-generation wall_time_s is
+        # None inside a scan, the measurable unit is the chunk dispatch
+        log.timing["fused"] = True
+        log.timing["chunks"] = chunks
 
     # scalar-oracle validation of the winner (best-first archive walk);
     # co-search candidates validate under THEIR OWN design, and the

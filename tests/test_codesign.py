@@ -79,6 +79,67 @@ def test_design_space_decode():
     assert kept.write_energy_pj == 1.0      # explicit choices survive
 
 
+def test_compute_steps_decode():
+    """ComputeLevel scalar knobs: one gene per field, appended after the
+    storage knobs, decoded onto the base design's compute unit (with
+    ``instances`` cast back to int)."""
+    from repro.search import COMPUTE_KNOB_LEVEL
+    base = two_level_arch()
+    space = DesignSpace(
+        capacity_steps={"Buffer": (2 * 1024, 8 * 1024)},
+        compute_steps={"instances": (64, 256),
+                       "mac_energy_pj": (0.5, 2.0)})
+    assert space.num_genes == 3
+    assert space.cardinality.tolist() == [2, 2, 2]
+    # compute knobs come last, tagged with the sentinel level
+    assert [lvl for _, lvl, _ in space.knobs] == \
+        ["Buffer", COMPUTE_KNOB_LEVEL, COMPUTE_KNOB_LEVEL]
+    arch = space.arch_of(base, [1, 0, 1])
+    assert arch.levels[1].capacity_words == 8 * 1024
+    assert arch.compute.instances == 64
+    assert isinstance(arch.compute.instances, int)
+    assert arch.compute.mac_energy_pj == 2.0
+    # untouched compute fields survive
+    assert arch.compute.gated_energy_pj == base.compute.gated_energy_pj
+    # all-zero genes reproduce base-compatible topology
+    assert arch_structure(arch) == arch_structure(base)
+
+
+def test_compute_steps_rejects_unknown_field():
+    with pytest.raises(ValueError, match="unknown ComputeLevel field"):
+        DesignSpace(compute_steps={"no_such_field": (1.0,)})
+
+
+def test_cosearch_compute_knobs_arch_params():
+    """Co-search genomes with compute genes produce per-candidate
+    ArchParams whose compute rows match a per-genome scalar pack."""
+    base = coordinate_list_design(two_level_arch())
+    wl = _workloads()[0]
+    space = DesignSpace(
+        capacity_steps={"Buffer": (2 * 1024, 64 * 1024)},
+        compute_steps={"mac_energy_pj": (0.5, 1.0, 2.0),
+                       "throughput": (1.0, 2.0)})
+    enc = CoSearchEncoding(wl, 2, CONS, space, base)
+    pop = enc.random_population(jrandom.PRNGKey(4), 16)
+    ap = enc.arch_params_of(pop)
+    assert len(np.unique(ap.compute, axis=0)) > 1
+    for i in (0, 5, 15):
+        ref = pack_arch_params(enc.design_of(pop[i]).arch)
+        np.testing.assert_array_equal(ap.storage[i], ref.storage)
+        np.testing.assert_array_equal(ap.compute[i], ref.compute)
+    # bucketed route with mixed compute designs == per-candidate oracle
+    routes = {}
+    for label, cfg in [
+            ("bucketed", SearchConfig(batch_threshold=1, bucketed=True)),
+            ("scalar", SearchConfig(batch_threshold=10 ** 18))]:
+        routes[label] = PopulationEvaluator(base, wl, enc, config=cfg)(pop)
+    np.testing.assert_array_equal(routes["bucketed"]["valid"],
+                                  routes["scalar"]["valid"])
+    finite = np.isfinite(routes["scalar"]["edp"])
+    np.testing.assert_allclose(routes["bucketed"]["edp"][finite],
+                               routes["scalar"]["edp"][finite], rtol=1e-6)
+
+
 def test_design_space_rejects_unknown_level_and_empty_steps():
     with pytest.raises(ValueError, match="empty step"):
         DesignSpace(capacity_steps={"Buffer": ()})
