@@ -1,0 +1,224 @@
+"""Topology-as-data: heterogeneous level-count + SAF-placement
+co-search through topology-grouped programs.
+
+Two claims are measured on the Table 5 CPHC workload (ResNet50 conv2_x
+as an im2col GEMM) over a TopologySpace (optional GLB, per-level SAF
+catalogs) composed with scalar provisioning knobs:
+
+  * **compile gate** — one mixed-topology ES run compiles at most ONE
+    program family per DISTINCT topology (``enumerate_designs``),
+    independent of the population size: each topology group is padded
+    to the full population, so its program sees a single jit shape.
+    Zero scalar-path evaluations; the winner is re-validated by the
+    scalar oracle under its own decoded design.
+  * **joint topology co-search wins** — (topology, design, mapping)
+    co-search at total budget B finds an EDP no worse than the
+    fixed-topology baseline (probe every distinct topology with a
+    short co-search, then spend the remaining budget on the winning
+    topology's space) at the SAME total budget.  Both winners are
+    re-validated by the scalar oracle under their own decoded design.
+
+  python -m benchmarks.bench_topology                 # full
+  python -m benchmarks.bench_topology --compile-gate  # CI gate
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import time
+
+from repro.core import Sparseloop, compile_stats, matmul
+from repro.core.arch import ComputeLevel, StorageLevel
+from repro.core.mapper import MapspaceConstraints
+from repro.core.taxonomy import SAFKind, TensorFormat
+from repro.search import (DesignSpace, LevelSlot, SAF_NONE, SAFOption,
+                          TopologySpace, run_search)
+
+from .common import RESNET50_LAYERS, emit
+
+#: per-topology probe budget of the fixed-topology baseline
+PER_TOPO_BUDGET = 64
+#: budget the baseline spends on its chosen topology after probing;
+#: joint co-search gets probe + refine as ONE budget
+REFINE_BUDGET = 256
+
+TOPOLOGY_JSON = "BENCH_topology.json"
+
+SKIP = SAFOption(
+    "skip",
+    formats=(("A", TensorFormat.of("UOP", "CP", coord_bits=4)),
+             ("B", TensorFormat.of("UOP", "CP", coord_bits=4))),
+    actions=((SAFKind.SKIP, "Z", ("A", "B")),))
+
+
+def _setup():
+    lname, M, K, N, dA, dB = RESNET50_LAYERS[0]          # Table 5 conv2_x
+    wl = matmul(M, K, N, densities={"A": ("uniform", dA),
+                                    "B": ("uniform", dB)}, name=lname)
+    ts = TopologySpace(
+        slots=(
+            LevelSlot(StorageLevel("DRAM", float("inf"), 16, 200.0,
+                                   200.0, 0.0)),
+            LevelSlot(StorageLevel("GLB", 96 * 1024, 128, 6.0, 6.0,
+                                   0.05),
+                      optional=True, saf_options=(SAF_NONE, SKIP)),
+            LevelSlot(StorageLevel("SPad", 512, 336, 1.2, 1.2, 0.02),
+                      saf_options=(SAF_NONE, SKIP)),
+        ),
+        compute=ComputeLevel("MAC", instances=168, mac_energy_pj=1.0,
+                             gated_energy_pj=0.05),
+        name="topo")
+    # provisioning knobs on REQUIRED levels only, so every topology of
+    # the space (GLB present or not) resolves them
+    space = DesignSpace(capacity_steps={"SPad": (256, 512, 1024)},
+                        bandwidth_steps={"DRAM": (8.0, 16.0, 32.0)})
+    # spatial constraints must sit inside the stable required suffix
+    # (level-from-inner 0 is SPad in EVERY decoded topology)
+    cons = MapspaceConstraints(seed=0, spatial={0: {"n": 8}})
+    return wl, ts, space, cons
+
+
+def compile_gate() -> list[tuple[str, float, str]]:
+    """One mixed-topology ES run with a hard, population-independent
+    compile budget: every topology group rides one padded program
+    (compiles <= distinct topologies x buckets), zero scalar-path
+    evaluations, and the winner revalidates under its own decoded
+    design."""
+    wl, ts, space, cons = _setup()
+    bound = len(ts.enumerate_designs())
+    assert bound >= 3, f"need >= 3 distinct topologies, got {bound}"
+
+    t0 = time.perf_counter()
+    with compile_stats.track() as st:
+        r = run_search(None, wl, dataclasses.replace(cons, budget=256),
+                       strategy="es", key=0, pop_size=32, mesh=None,
+                       topology_space=ts, design_space=space)
+    wall = time.perf_counter() - t0
+    print(f"topology compile gate: {bound} distinct topologies, "
+          f"{r.evaluated} evaluations -> {st.compiles} compile(s) "
+          f"(bound {bound}), {st.scalar_evals} scalar-path evals, "
+          f"{wall:.1f}s")
+    assert st.scalar_evals == 0, (
+        f"mixed-topology search fell back to the scalar path for "
+        f"{st.scalar_evals} candidates")
+    # >= 3 groups materialized (each costs its program), <= the space's
+    # distinct-topology bound — independent of the population size
+    assert 3 <= st.compiles <= bound, (
+        f"mixed-topology run compiled {st.compiles} programs, expected "
+        f"within [3, {bound}] — the topology-grouped lowering "
+        f"regressed (by kind: {st.compiles_by_kind})")
+
+    assert r.best is not None and r.best.result.valid
+    oracle = Sparseloop(r.best_design).evaluate(wl, r.best_nest)
+    parity = abs(oracle.edp - r.best.edp) / abs(oracle.edp)
+    print(f"  winner {r.best_design.name}: edp={r.best.edp:.4e}, "
+          f"oracle parity {parity:.2e} rel")
+    assert parity <= 1e-6, f"winner/oracle parity broke: {parity:.3e}"
+    _write_json({"gate": {
+        "topologies": bound, "compiles": st.compiles,
+        "scalar_evals": st.scalar_evals,
+        "evaluations": r.evaluated, "wall_s": wall,
+        "winner": r.best_design.name, "edp": float(r.best.edp),
+        "parity_rel": parity}})
+    return [("topology_compile_gate", wall * 1e6 / max(1, r.evaluated),
+             f"topologies={bound};compiles={st.compiles};bound={bound};"
+             f"scalar_evals={st.scalar_evals};"
+             f"winner={r.best_design.name};parity_rel={parity:.2e}")]
+
+
+def _write_json(blob: dict) -> None:
+    with open(TOPOLOGY_JSON, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {TOPOLOGY_JSON}")
+
+
+def _fixed_topology(wl, ts, space, cons, total_budget: int, key: int):
+    """Topology-then-everything baseline: probe every DISTINCT topology
+    with a short (design, mapping) co-search, then spend the remaining
+    budget co-searching the winning topology's space.  Returns
+    (result, design, evals)."""
+    import numpy as np
+
+    designs = ts.enumerate_designs()
+    best_edp, best_design, spent = np.inf, designs[0][1], 0
+    for i, (_key, d) in enumerate(designs):
+        r = run_search(d, wl,
+                       dataclasses.replace(cons,
+                                           budget=PER_TOPO_BUDGET),
+                       strategy="es", key=key + 7 * i + 1, pop_size=16,
+                       mesh=None, design_space=space)
+        spent += r.evaluated
+        if r.best is not None and r.best.edp < best_edp:
+            best_edp, best_design = r.best.edp, d
+    r = run_search(best_design, wl,
+                   dataclasses.replace(cons,
+                                       budget=total_budget - spent),
+                   strategy="es", key=key, pop_size=32, mesh=None,
+                   design_space=space)
+    winner = r.best_design if r.best_design is not None else best_design
+    return r, winner, spent + r.evaluated
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = compile_gate()
+    wl, ts, space, cons = _setup()
+    n_topo = len(ts.enumerate_designs())
+    total = PER_TOPO_BUDGET * n_topo + REFINE_BUDGET
+
+    t0 = time.perf_counter()
+    r_fix, d_fix, ev_fix = _fixed_topology(wl, ts, space, cons, total,
+                                           key=0)
+    t_fix = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    with compile_stats.track() as st:
+        r_joint = run_search(None, wl,
+                             dataclasses.replace(cons, budget=total),
+                             strategy="es", key=0, pop_size=32,
+                             mesh=None, topology_space=ts,
+                             design_space=space)
+    t_joint = time.perf_counter() - t0
+
+    # both winners re-validated by the scalar oracle under their OWN
+    # decoded design
+    for r, d in ((r_fix, d_fix), (r_joint, r_joint.best_design)):
+        ev = Sparseloop(d).evaluate(wl, r.best_nest)
+        assert ev.result.valid
+        assert abs(ev.edp - r.best.edp) <= 1e-9 * abs(ev.edp)
+    ratio = r_joint.best.edp / r_fix.best.edp
+    print(f"topology co-search at equal total budget {total} "
+          f"({n_topo} distinct topologies):")
+    print(f"  fixed-topology: edp={r_fix.best.edp:.4e}  {d_fix.name}  "
+          f"{ev_fix} evals  {t_fix:.1f}s")
+    print(f"  joint:          edp={r_joint.best.edp:.4e}  "
+          f"{r_joint.best_design.name}  {r_joint.evaluated} evals  "
+          f"{t_joint:.1f}s  ({st.compiles} compiles, "
+          f"{st.scalar_evals} scalar evals)")
+    print(f"  joint/fixed EDP ratio: {ratio:.3f} "
+          f"({'joint wins' if ratio <= 1.0 else 'REGRESSION'})")
+    assert ratio <= 1.0, (
+        f"joint topology co-search lost to the fixed-topology baseline "
+        f"at equal budget (ratio {ratio:.3f})")
+    _write_json({"comparison": {
+        "topologies": n_topo, "budget": total,
+        "edp_joint": float(r_joint.best.edp),
+        "edp_fixed": float(r_fix.best.edp), "ratio": float(ratio),
+        "winner_joint": r_joint.best_design.name,
+        "winner_fixed": d_fix.name, "compiles": st.compiles,
+        "wall_s_joint": t_joint, "wall_s_fixed": t_fix}})
+    rows.append(
+        ("topology_vs_fixed",
+         t_joint * 1e6 / max(1, r_joint.evaluated),
+         f"topologies={n_topo};budget={total};"
+         f"edp_joint={r_joint.best.edp:.4e};"
+         f"edp_fixed={r_fix.best.edp:.4e};ratio={ratio:.3f};"
+         f"winner={r_joint.best_design.name};compiles={st.compiles}"))
+    return rows
+
+
+if __name__ == "__main__":
+    if "--compile-gate" in sys.argv:
+        emit(compile_gate())
+    else:
+        emit(run())

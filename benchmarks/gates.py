@@ -93,6 +93,13 @@ GATES: tuple[Gate, ...] = (
          "scalar evals, same-key re-run byte-identical, winner "
          "oracle-confirmed, hybrid ES+SGD <= pure ES at equal budget; "
          "writes BENCH_fused.json"),
+    Gate("topology-compile-gate",
+         ("-m", "benchmarks.bench_topology", "--compile-gate"), 900,
+         "mixed-topology ES population (optional level + per-level SAF "
+         "catalogs) compiles at most one program family per DISTINCT "
+         "topology, independent of population size, zero scalar evals, "
+         "winner oracle-validated under its own decoded design; "
+         "writes BENCH_topology.json"),
 )
 
 

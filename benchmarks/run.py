@@ -155,7 +155,8 @@ def registry() -> list[tuple[str, object]]:
                    bench_fleet, bench_fused, bench_kernels, bench_obs,
                    bench_search_convergence, bench_service,
                    bench_stc_exact, bench_table5_cphc,
-                   bench_table7_compression, bench_vmapper)
+                   bench_table7_compression, bench_topology,
+                   bench_vmapper)
 
     return [
         ("fig1_formats", bench_fig1_formats),
@@ -176,6 +177,7 @@ def registry() -> list[tuple[str, object]]:
         ("obs", bench_obs),
         ("dse_service", bench_service),
         ("fused_search", bench_fused),
+        ("topology_cosearch", bench_topology),
     ]
 
 

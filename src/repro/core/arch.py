@@ -130,6 +130,30 @@ def arch_structure(arch: Architecture) -> tuple:
     return (tuple(lv.name for lv in arch.levels), arch.compute.name)
 
 
+def topology_key(arch: Architecture, safs=None) -> tuple:
+    """The canonical *topology key* of a design: everything that shapes
+    a compiled program's trace and nothing that doesn't.
+
+    Without ``safs`` this is exactly :func:`arch_structure` — level
+    names (outermost-first) plus the compute-unit name.  With a
+    ``SAFSpec`` it extends to the *SAF placement*: which (level, tensor)
+    pairs carry compressed formats and which gate/skip actions are
+    attached.  Two ``Design``s with equal topology keys share compiled
+    programs whatever their scalar provisioning; two designs with
+    different keys (one more level, a SAF moved one level up) need
+    distinct programs.  Heterogeneous-topology populations are grouped
+    by this key the way bucketed dispatch groups by ``TemplateBucket``:
+    O(topology groups) programs, not O(population).
+    """
+    key = arch_structure(arch)
+    if safs is None:
+        return key
+    # formats: dict keyed by unique (level_name, tensor) str pairs ->
+    # sorting the items is total and never compares the format values
+    fmts = tuple(sorted((k, v) for k, v in safs.formats.items()))
+    return key + (fmts, tuple(safs.actions))
+
+
 @dataclasses.dataclass(frozen=True)
 class ArchParams:
     """Traced architecture inputs of one compiled program — the design

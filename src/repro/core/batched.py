@@ -116,7 +116,8 @@ from jax.experimental import enable_x64
 from .. import obs
 from . import compile_stats
 from .arch import (COMPUTE_FIELDS, STORAGE_FIELDS, ArchParams,
-                   Architecture, arch_structure, pack_arch_params)
+                   Architecture, arch_structure, pack_arch_params,
+                   topology_key)
 from .density import (ACTUAL_ID, BatchedDensityUnsupported, DensityCaps,
                       DensityModel, TracedDensityStats, caps_for_models,
                       make_density_model)
@@ -624,13 +625,13 @@ class _TracedNestModel:
         this facade's workload_params / arch_params / histograms for
         the program's lifetime."""
         import copy
-        # keyed by arch TOPOLOGY (level names — what the SAF specs and
-        # therefore the trace structure depend on), never by the arch's
-        # scalar provisioning: capacities / bandwidths / energies ride
-        # in as traced ArchParams, so a design sweep shares programs
-        key = (arch_structure(self.design.arch),
-               _freeze(self.safs.formats),
-               self.safs.actions, workload_structure(self.workload),
+        # keyed by the canonical TOPOLOGY KEY (level names + compute
+        # name + SAF placement — what shapes the trace), never by the
+        # arch's scalar provisioning: capacities / bandwidths / energies
+        # ride in as traced ArchParams, so a design sweep shares
+        # programs and a mixed-topology population costs O(groups)
+        key = (topology_key(self.design.arch, self.safs),
+               workload_structure(self.workload),
                self.caps, self.check_capacity, token)
         with _CACHE_LOCK:
             rec = _PROGRAM_CACHE.get(key)

@@ -228,34 +228,49 @@ class Sparseloop:
 
         Architecture scalars (capacities, bandwidths, per-action
         energies, PE counts) are traced ``ArchParams`` inputs of the
-        programs, which are keyed by arch *topology* (level names) —
-        so the sweep compiles O(buckets) programs, independent of the
-        number of design points: each arch just binds its own params.
-        ``archs`` are ``Architecture``s — or ``Design``s carrying this
-        engine's exact SAF spec — whose topology matches this design's.
-        Returns one ``evaluate_batch``-shaped dict per arch, aligned
-        with ``archs``."""
-        from .arch import arch_structure, pack_arch_params
+        programs, which are keyed by canonical *topology key* (level
+        names + SAF placement, ``arch.topology_key``).  ``archs`` mixes
+        freely: ``Architecture``s (riding this engine's SAF spec) and
+        ``Design``s carrying their OWN SAF specs — entries are grouped
+        by topology key and each group binds its params to its group's
+        programs, so a heterogeneous sweep compiles O(topology groups x
+        buckets) programs, independent of the number of design points.
+        The candidate nests are shared across every entry, so level
+        COUNTS must match this engine's (heterogeneous level counts
+        need per-candidate nests — that lives in the search layer,
+        ``TopologyCoSearchEncoding``).  Returns one
+        ``evaluate_batch``-shaped dict per arch, aligned with
+        ``archs``."""
+        from .arch import pack_arch_params, topology_key
         base = self.design
-        resolved = []
-        for a in archs:
-            if isinstance(a, Design):
-                if a.safs != base.safs:
-                    raise ValueError(
-                        f"design {a.name!r} carries a different SAF spec "
-                        f"than this engine's {base.name!r}; SAFs are "
-                        f"program structure — build a separate "
-                        f"Sparseloop for it")
-                a = a.arch
-            if arch_structure(a) != arch_structure(base.arch):
+        base_key = topology_key(base.arch, base.safs)
+        members: dict[tuple, list[int]] = {}
+        reps: dict[tuple, Design] = {}
+        params: list = []
+        for pos, a in enumerate(archs):
+            d = a if isinstance(a, Design) \
+                else dataclasses.replace(base, arch=a)
+            if d.arch.num_levels != base.arch.num_levels:
                 raise ValueError(
-                    f"architecture {a.name!r} has topology "
-                    f"{arch_structure(a)}, this engine's programs are "
-                    f"built for {arch_structure(base.arch)}")
-            resolved.append(a)
-        params = [pack_arch_params(a) for a in resolved]
-        return self._grouped_eval(workload, nests, check_capacity,
-                                  bucketed, caps, params)
+                    f"architecture {d.arch.name!r} has topology with "
+                    f"{d.arch.num_levels} levels; the shared nest "
+                    f"population is lowered for "
+                    f"{base.arch.num_levels} — heterogeneous level "
+                    f"counts need per-candidate nests "
+                    f"(search.TopologyCoSearchEncoding)")
+            key = topology_key(d.arch, d.safs)
+            members.setdefault(key, []).append(pos)
+            reps.setdefault(key, d)
+            params.append(pack_arch_params(d.arch))
+        outs: list = [None] * len(params)
+        for key, idxs in members.items():
+            engine = self if key == base_key else Sparseloop(reps[key])
+            res = engine._grouped_eval(
+                workload, nests, check_capacity, bucketed, caps,
+                [params[i] for i in idxs])
+            for pos, r in zip(idxs, res):
+                outs[pos] = r
+        return outs
 
     # ------------------------------------------------------------------
     def cphc(self, workload: Workload, nest: LoopNest,

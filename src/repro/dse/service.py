@@ -53,7 +53,7 @@ from collections import deque
 import numpy as np
 
 from .. import obs
-from ..core.arch import ArchParams
+from ..core.arch import ArchParams, topology_key
 from ..obs import metrics
 
 
@@ -177,6 +177,11 @@ class EvaluationService:
         self._cv = threading.Condition()
         self._closed = False
         self._clients: set[str] = set()
+        # first-seen labels per (topology key, program kind) — the
+        # span/stats view of how many distinct program families the
+        # service is batching for (heterogeneous-topology clients land
+        # in different groups and still coalesce within their own)
+        self._group_ids: dict[tuple, str] = {}
         # service-wide accounting (metrics mirror these for exports)
         self.requests = 0
         self.batches = 0
@@ -286,6 +291,7 @@ class EvaluationService:
                 "candidates": self.candidates,
                 "fused_chunks": self.fused_chunks,
                 "pending": len(self._queue),
+                "groups": len(self._group_ids),
                 "clients": sorted(self._clients),
             }
 
@@ -357,6 +363,25 @@ class EvaluationService:
         their per-candidate rows."""
         return (id(req.model), req.arch_params is None)
 
+    def _group_label(self, model) -> str:
+        """Stable first-seen label ("g0", "g1", ...) for the model's
+        topology group — ``(topology key, program kind)``.  Facades for
+        the same topology share a label even across distinct bucket
+        objects, so spans/stats count *program families*, not cache
+        entries.  Facades without a design (test doubles) fall back to
+        identity keys."""
+        try:
+            key = (topology_key(model.design.arch, model.safs),
+                   getattr(model, "kind", None))
+        except AttributeError:
+            key = (id(model),)
+        with self._cv:
+            label = self._group_ids.get(key)
+            if label is None:
+                label = f"g{len(self._group_ids)}"
+                self._group_ids[key] = label
+        return label
+
     def _serve(self, pending: list[_Request]) -> None:
         fused = [r for r in pending if isinstance(r, _FusedRequest)]
         pending = [r for r in pending if not isinstance(r, _FusedRequest)]
@@ -389,7 +414,7 @@ class EvaluationService:
         return np.concatenate([arr, np.repeat(arr[-1:], pad, axis=0)])
 
     def _invoke(self, model, bounds, ids, ap_rows, n_req: int,
-                clients: str) -> dict[str, np.ndarray]:
+                clients: str, group: str) -> dict[str, np.ndarray]:
         """One compiled-program invocation over concatenated candidate
         arrays, in fixed ``batch_slots`` windows when configured (every
         window shares ONE jit shape: short ones pad, long ones split)."""
@@ -412,7 +437,8 @@ class EvaluationService:
                     structure=structure)
             with obs.span("dse.batch", requests=n_req,
                           candidates=live, padded=len(b) - live,
-                          kind=model.kind, clients=clients):
+                          kind=model.kind, group=group,
+                          clients=clients):
                 if ids is None:
                     res = model.evaluate(b, mesh=self.mesh,
                                          arch_params=ap)
@@ -465,7 +491,8 @@ class EvaluationService:
                            reqs[0].arch_params.structure)
             res = self._invoke(
                 model, bounds, ids, ap_rows, n_req,
-                ",".join(sorted({r.client for r in reqs})))
+                ",".join(sorted({r.client for r in reqs})),
+                self._group_label(model))
         except BaseException as exc:  # noqa: BLE001 — fan the error out
             for req in reqs:
                 req.future.set_exception(exc)

@@ -24,7 +24,9 @@ Entry points: :func:`run_search` here, or
 ``repro.core.mapper.search(..., strategy="es")``.
 """
 from .encoding import (COMPUTE_KNOB_LEVEL, CoSearchEncoding, DesignSpace,
-                       MapspaceEncoding, prime_factors)
+                       LevelSlot, MapspaceEncoding, SAF_NONE, SAFOption,
+                       TopologyCoSearchEncoding, TopologySpace,
+                       prime_factors)
 from .fused import (ChunkAbsorber, FusedProgram, fused_supported,
                     get_fused_program)
 from .log import GenerationRecord, SearchLog
@@ -36,7 +38,8 @@ from .strategies import (STRATEGIES, EvolutionStrategy, HillClimb,
 
 __all__ = [
     "COMPUTE_KNOB_LEVEL", "CoSearchEncoding", "DesignSpace",
-    "MapspaceEncoding", "prime_factors",
+    "LevelSlot", "MapspaceEncoding", "SAF_NONE", "SAFOption",
+    "TopologyCoSearchEncoding", "TopologySpace", "prime_factors",
     "ChunkAbsorber", "FusedProgram", "fused_supported",
     "get_fused_program",
     "GenerationRecord", "SearchLog",

@@ -49,12 +49,14 @@ from typing import Mapping
 import numpy as np
 
 from ..core.arch import (COMPUTE_FIELDS, Architecture, ArchParams,
-                         StorageLevel, pack_arch_params)
+                         ComputeLevel, StorageLevel, pack_arch_params,
+                         topology_key)
 from ..core.batched import NestTemplate, TemplateBucket
 from ..core.engine import Design
 from ..core.mapper import (MapspaceConstraints, constrained_order,
                            spatial_residual)
 from ..core.mapping import LoopNest
+from ..core.taxonomy import ActionSAF, SAFKind, SAFSpec, TensorFormat
 from ..core.workload import Workload
 
 
@@ -438,9 +440,14 @@ class DesignSpace:
             yield np.asarray(combo, np.int64)
 
     # ------------------------------------------------------------------
-    def arch_of(self, base: Architecture, genes) -> Architecture:
-        """Apply a design-gene row to a base architecture (level names
-        must all exist in it)."""
+    def arch_of(self, base: Architecture, genes, *,
+                missing_ok: bool = False) -> Architecture:
+        """Apply a design-gene row to a base architecture.  Level names
+        must all exist in it unless ``missing_ok`` — the heterogeneous-
+        topology escape: one DesignSpace composes with EVERY topology of
+        a :class:`TopologySpace`, so a knob naming a level a particular
+        topology dropped is simply inert there (its gene still occupies
+        the genome slot, keeping the layout topology-independent)."""
         genes = np.asarray(genes, np.int64).reshape(-1)
         if len(genes) != self.num_genes:
             raise ValueError(f"expected {self.num_genes} design genes, "
@@ -456,6 +463,8 @@ class DesignSpace:
                 compute_ov[field] = int(v) if field == "instances" else v
                 continue
             if lvl not in names:
+                if missing_ok:
+                    continue
                 raise ValueError(f"DesignSpace level {lvl!r} not in "
                                  f"architecture {base.name!r} "
                                  f"({sorted(names)})")
@@ -488,13 +497,15 @@ class DesignSpace:
                 ov = {**ov, "metadata_read_energy_pj": -1.0}
         return dataclasses.replace(lv, **ov)
 
-    def design_of(self, base: Design, genes) -> Design:
+    def design_of(self, base: Design, genes, *,
+                  missing_ok: bool = False) -> Design:
         """Apply a design-gene row to a base Design (same SAFs; the
         name grows a gene-tuple suffix for log/bench readability)."""
         genes = np.asarray(genes, np.int64).reshape(-1)
         suffix = ".".join(str(int(g)) for g in genes)
         return dataclasses.replace(
-            base, arch=self.arch_of(base.arch, genes),
+            base, arch=self.arch_of(base.arch, genes,
+                                    missing_ok=missing_ok),
             name=f"{base.name or base.arch.name}@{suffix}")
 
     def describe(self) -> str:
@@ -585,3 +596,471 @@ class CoSearchEncoding(MapspaceEncoding):
     def describe(self) -> str:
         return (super().describe() + f"; co-search x "
                 + self.space.describe())
+
+
+# ----------------------------------------------------------------------
+# topology-as-data: level count + SAF placement as genome data
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SAFOption:
+    """One catalog entry of sparse acceleration features attachable to
+    a storage level: per-tensor compressed formats plus gate/skip
+    actions anchored at that level.  Options are written level-name-
+    free so the same catalog composes with any :class:`LevelSlot`;
+    :meth:`attach` binds one to a concrete level name.
+
+    ``formats`` is ``((tensor, TensorFormat), ...)``; ``actions`` is
+    ``((SAFKind, follower, (leaders...)), ...)``."""
+
+    name: str
+    formats: tuple = ()
+    actions: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "formats", tuple(
+            (str(t), f) for t, f in self.formats))
+        object.__setattr__(self, "actions", tuple(
+            (SAFKind(k), str(fo), tuple(str(x) for x in le))
+            for k, fo, le in self.actions))
+        for _, f in self.formats:
+            if not isinstance(f, TensorFormat):
+                raise ValueError(f"SAFOption {self.name!r}: format "
+                                 f"values must be TensorFormat, got "
+                                 f"{type(f).__name__}")
+
+    def attach(self, level_name: str) -> tuple[dict, tuple]:
+        """Bind this option to a level: ``(formats, actions)`` in
+        :class:`~repro.core.taxonomy.SAFSpec` shape."""
+        fmts = {(level_name, t): f for t, f in self.formats}
+        acts = tuple(ActionSAF(kind=k, level=level_name, follower=fo,
+                               leaders=le)
+                     for k, fo, le in self.actions)
+        return fmts, acts
+
+
+#: the empty catalog entry: keep the level dense, attach nothing
+SAF_NONE = SAFOption("none")
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelSlot:
+    """One composable block of a :class:`TopologySpace` — a storage
+    level that is either always present or gated by a presence gene,
+    with an optional per-slot SAF catalog (one SAF gene choosing which
+    entry, if any, attaches to the level)."""
+
+    level: StorageLevel
+    optional: bool = False
+    saf_options: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "saf_options",
+                           tuple(self.saf_options))
+        for opt in self.saf_options:
+            if not isinstance(opt, SAFOption):
+                raise ValueError(f"slot {self.level.name!r}: "
+                                 f"saf_options must be SAFOption "
+                                 f"entries, got {type(opt).__name__}")
+        names = [opt.name for opt in self.saf_options]
+        if len(set(names)) != len(names):
+            raise ValueError(f"slot {self.level.name!r}: duplicate "
+                             f"SAFOption names {names}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpace:
+    """Topology search space: the memory hierarchy as a sequence of
+    composable :class:`LevelSlot` blocks (outermost first), LiteX-style
+    — architectures are *composed* from parameterized blocks, never
+    hand-written monoliths.
+
+    Genes: one **presence** gene (cardinality 2) per optional slot,
+    then one **SAF** gene per slot that carries a catalog (cardinality
+    = catalog size).  Every in-range gene row decodes to a valid
+    ``(Architecture, SAFSpec)`` *by construction*: the level count is
+    always within ``[min_levels, max_levels]`` (required slots have no
+    gene) and SAFs only ever attach to levels that exist (an absent
+    slot's SAF gene is inert — decode, name, and topology key ignore
+    it), so repair is a plain mod and never a projection.
+
+    Distinct decoded topologies are identified by their canonical
+    :func:`~repro.core.arch.topology_key`; a mixed-topology population
+    groups by that key and rides O(groups) compiled programs, exactly
+    as bucketed dispatch groups by ``TemplateBucket``."""
+
+    #: LevelSlot blocks, outermost-first (like ``Architecture.levels``)
+    slots: tuple
+    compute: ComputeLevel = ComputeLevel()
+    #: ActionSAFs always present, anchored at "compute" or a REQUIRED
+    #: level's name (optional levels take actions via their catalog)
+    base_actions: tuple = ()
+    name: str = "topo"
+
+    def __post_init__(self):
+        object.__setattr__(self, "slots", tuple(self.slots))
+        object.__setattr__(self, "base_actions",
+                           tuple(self.base_actions))
+        if not any(not s.optional for s in self.slots):
+            raise ValueError("TopologySpace needs at least one "
+                             "required (non-optional) LevelSlot")
+        names = [s.level.name for s in self.slots]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate level names {names}")
+        anchors = {s.level.name for s in self.slots
+                   if not s.optional} | {"compute"}
+        for a in self.base_actions:
+            if a.level not in anchors:
+                raise ValueError(
+                    f"base action {a.describe()!r} anchored at "
+                    f"{a.level!r}, which is not 'compute' or a "
+                    f"required level ({sorted(anchors)}) — attach "
+                    f"optional-level SAFs via the slot's catalog")
+
+    # ------------------------------------------------------------------
+    @property
+    def min_levels(self) -> int:
+        return sum(1 for s in self.slots if not s.optional)
+
+    @property
+    def max_levels(self) -> int:
+        return len(self.slots)
+
+    @property
+    def stable_inner_levels(self) -> int:
+        """Length of the contiguous REQUIRED suffix of slots: level
+        indices-from-inner below this bind to the same physical level
+        in every decoded topology (spatial constraints must stay inside
+        it)."""
+        n = 0
+        for s in reversed(self.slots):
+            if s.optional:
+                break
+            n += 1
+        return n
+
+    @property
+    def knobs(self) -> tuple:
+        """(kind, slot_index, cardinality) per gene: presence genes
+        for the optional slots first (slot order), then SAF genes for
+        the catalog-carrying slots (slot order)."""
+        pres = [("presence", i, 2)
+                for i, s in enumerate(self.slots) if s.optional]
+        safg = [("saf", i, len(s.saf_options))
+                for i, s in enumerate(self.slots) if s.saf_options]
+        return tuple(pres + safg)
+
+    @property
+    def num_genes(self) -> int:
+        return len(self.knobs)
+
+    @property
+    def cardinality(self) -> np.ndarray:
+        return np.asarray([c for _, _, c in self.knobs], np.int64)
+
+    @property
+    def size(self) -> int:
+        """Gene-row count (an upper bound on distinct topologies —
+        absent slots make their SAF genes inert)."""
+        return int(np.prod(self.cardinality, initial=1))
+
+    # ------------------------------------------------------------------
+    def repair(self, genes) -> np.ndarray:
+        g = np.asarray(genes, np.int64).reshape(-1)
+        if len(g) != self.num_genes:
+            raise ValueError(f"expected {self.num_genes} topology "
+                             f"genes, got {len(g)}")
+        return np.mod(g, self.cardinality)
+
+    def decode(self, genes) -> tuple[Architecture, SAFSpec]:
+        """Gene row -> (Architecture, SAFSpec).  Always valid: levels
+        are the present slots outermost-first, SAFs attach only to
+        present levels, and absent slots' SAF genes are ignored."""
+        g = self.repair(genes)
+        choice = {i: int(v) for (kind, i, _), v
+                  in zip(self.knobs, g) if kind == "presence"}
+        saf = {i: int(v) for (kind, i, _), v
+               in zip(self.knobs, g) if kind == "saf"}
+        levels, formats = [], {}
+        actions = list(self.base_actions)
+        tags = []
+        for i, s in enumerate(self.slots):
+            if s.optional and choice[i] == 0:
+                continue
+            levels.append(s.level)
+            opt = (s.saf_options[saf[i]] if s.saf_options
+                   else SAF_NONE)
+            if opt.formats or opt.actions:
+                fmts, acts = opt.attach(s.level.name)
+                formats.update(fmts)
+                actions.extend(acts)
+            tags.append(s.level.name if opt is SAF_NONE
+                        else f"{s.level.name}+{opt.name}")
+        arch = Architecture(name=f"{self.name}[" + "/".join(tags) + "]",
+                            levels=tuple(levels), compute=self.compute)
+        return arch, SAFSpec(formats=formats, actions=tuple(actions))
+
+    def design_of(self, genes) -> Design:
+        arch, safs = self.decode(genes)
+        return Design(arch=arch, safs=safs, name=arch.name)
+
+    def topology_key_of(self, genes) -> tuple:
+        """Canonical key of the decoded topology — equal across
+        derivation-equal gene rows (inert-gene differences included)."""
+        arch, safs = self.decode(genes)
+        return topology_key(arch, safs)
+
+    def full_design(self) -> Design:
+        """Every slot present, catalog entry 0 — the representative
+        design evaluators use for capability probing and logging."""
+        genes = np.zeros(self.num_genes, np.int64)
+        for j, (kind, _, _) in enumerate(self.knobs):
+            if kind == "presence":
+                genes[j] = 1
+        return self.design_of(genes)
+
+    def enumerate_designs(self) -> list[tuple[tuple, Design]]:
+        """All DISTINCT topologies of the space as (topology_key,
+        Design) pairs, first-seen gene order — ``len()`` of this is the
+        compile-count bound for a mixed-topology population."""
+        out: dict[tuple, Design] = {}
+        for combo in itertools.product(
+                *[range(c) for _, _, c in self.knobs]):
+            d = self.design_of(np.asarray(combo, np.int64))
+            out.setdefault(topology_key(d.arch, d.safs), d)
+        return list(out.items())
+
+    def describe(self) -> str:
+        return (f"{self.num_genes} topology genes, "
+                f"{len(self.enumerate_designs())} distinct topologies "
+                f"({self.min_levels}-{self.max_levels} levels)")
+
+
+@dataclasses.dataclass
+class _TopoGroup:
+    """One topology group of a mixed population: its canonical key,
+    the decoded base Design, and the sub-encoding whose mapping genome
+    the master genome folds into."""
+
+    key: tuple
+    design: Design
+    enc: MapspaceEncoding
+
+
+class TopologyCoSearchEncoding(MapspaceEncoding):
+    """Joint (topology, design, mapping) genome — the last
+    "structure is not data" gap closed.
+
+    Layout: ``[factor genes (cardinality max_levels)] [max_levels
+    permutation genes] [design genes] [topology genes]``.  The mapping
+    segment is written against the DEEPEST topology; for an L-level
+    group the factor genes fold ``mod L`` and the first L permutation
+    genes apply — so one strategy kernel mutates one flat genome while
+    every candidate stays decodable under its own topology.
+
+    Populations do not share a bucket program across topologies (the
+    level count shapes the trace), so the master ``decode_bucketed``
+    raises: callers group with :meth:`group_by_topology` and decode
+    each group through its own sub-encoding (:meth:`sub_genomes` ->
+    ``group.enc.decode_bucketed``), paying O(topology groups) compiles
+    exactly like bucketed dispatch pays O(buckets)."""
+
+    def __init__(self, workload: Workload,
+                 cons: MapspaceConstraints | None,
+                 topo: TopologySpace,
+                 space: DesignSpace | None = None):
+        cons = cons or MapspaceConstraints()
+        if cons.permutations:
+            raise ValueError(
+                "topology co-search needs free permutations: "
+                "cons.permutations pins loop orders by level index, "
+                "which is ambiguous across level counts")
+        stable = topo.stable_inner_levels
+        bad = sorted(lvl for lvl in (cons.spatial or {})
+                     if lvl >= stable)
+        if bad:
+            raise ValueError(
+                f"spatial constraints at level(s) {bad} exceed the "
+                f"stable inner suffix ({stable} required innermost "
+                f"slot(s)) — those indices bind to different physical "
+                f"levels in different topologies")
+        super().__init__(workload, topo.max_levels, cons)
+        self.topo = topo
+        self.space = space
+        num_design = space.num_genes if space is not None else 0
+        if space is not None and num_design == 0:
+            raise ValueError("DesignSpace has no knobs — pass "
+                             "space=None for (topology, mapping) "
+                             "search without scalar knobs")
+        if space is not None:
+            # fail fast on knobs no topology of the space can resolve
+            full = topo.full_design()
+            space.arch_of(full.arch,
+                          np.zeros(space.num_genes, np.int64),
+                          missing_ok=True)
+            known = ({lv.name for s in topo.slots
+                      for lv in (s.level,)} | {COMPUTE_KNOB_LEVEL})
+            missing = sorted({lvl for _, lvl, _ in space.knobs}
+                             - known)
+            if missing:
+                raise ValueError(f"DesignSpace level(s) {missing} "
+                                 f"exist in NO slot of the "
+                                 f"TopologySpace")
+        self.num_map_genes = self.genome_size
+        self.design_off = self.num_map_genes
+        self.topo_off = self.num_map_genes + num_design
+        self.genome_size = self.topo_off + topo.num_genes
+        card = [self.cardinality]
+        if space is not None:
+            card.append(space.cardinality)
+        card.append(topo.cardinality)
+        self.cardinality = np.concatenate(card)
+        trailing = num_design + topo.num_genes
+        self.gene_block = np.concatenate(
+            [self.gene_block, self.num_blocks + np.arange(trailing)])
+        self.num_blocks += trailing
+        self._groups: dict[tuple, _TopoGroup] = {}
+
+    # ------------------------------------------------------------------
+    def structured_population(self, key, n: int) -> np.ndarray:
+        """Block-structured mapping genes + uniform design and
+        topology genes (every topology starts represented in
+        expectation)."""
+        import jax.random as jrandom
+        k1, k2 = jrandom.split(key)
+        out = super().structured_population(k1, n)
+        trailing = self.genome_size - self.design_off
+        if trailing:
+            out[:, self.design_off:] = np.asarray(jrandom.randint(
+                k2, (n, trailing), 0,
+                self.cardinality[self.design_off:]), np.int64)
+        return out
+
+    # ------------------------------------------------------------------
+    def design_genes(self, genomes: np.ndarray) -> np.ndarray:
+        """(n, num_design_genes) repaired design segment."""
+        return self.repair(np.atleast_2d(np.asarray(genomes, np.int64))
+                           )[:, self.design_off:self.topo_off]
+
+    def topo_genes(self, genomes: np.ndarray) -> np.ndarray:
+        """(n, num_topology_genes) repaired topology segment."""
+        return self.repair(np.atleast_2d(np.asarray(genomes, np.int64))
+                           )[:, self.topo_off:]
+
+    def group_for(self, tkey: tuple) -> _TopoGroup:
+        """The cached :class:`_TopoGroup` for a topology key seen by
+        :meth:`group_by_topology`."""
+        return self._groups[tkey]
+
+    def _group_of_row(self, row: np.ndarray) -> _TopoGroup:
+        design = self.topo.design_of(row)
+        tkey = topology_key(design.arch, design.safs)
+        grp = self._groups.get(tkey)
+        if grp is None:
+            grp = _TopoGroup(
+                key=tkey, design=design,
+                enc=MapspaceEncoding(self.workload,
+                                     design.arch.num_levels,
+                                     self.cons))
+            self._groups[tkey] = grp
+        return grp
+
+    def group_by_topology(self, genomes: np.ndarray
+                          ) -> list[tuple[_TopoGroup, np.ndarray]]:
+        """Group a (n, G) population by canonical topology key:
+        ``(group, original-indices)`` pairs ordered by each group's
+        first member (deterministic; topology keys themselves are not
+        orderable — they carry TensorFormat entries)."""
+        tg = self.topo_genes(genomes)
+        uniq, inverse = np.unique(tg, axis=0, return_inverse=True)
+        inverse = np.asarray(inverse).reshape(-1)
+        by_key: dict[tuple, list] = {}
+        for u, row in enumerate(uniq):
+            grp = self._group_of_row(row)
+            by_key.setdefault(grp.key, []).append(u)
+        out = []
+        for tkey, us in by_key.items():
+            idx = np.flatnonzero(np.isin(inverse, us))
+            out.append((self._groups[tkey], idx))
+        out.sort(key=lambda t: int(t[1][0]))
+        return out
+
+    def sub_genomes(self, genomes: np.ndarray,
+                    grp: _TopoGroup) -> np.ndarray:
+        """Fold master mapping genes into ``grp``'s sub-encoding
+        genome: factor genes mod L, first L permutation genes."""
+        g = self.repair(np.atleast_2d(np.asarray(genomes, np.int64)))
+        L = grp.enc.num_levels
+        F = self.num_factor_genes
+        fac = np.mod(g[:, :F], L)
+        perm = g[:, F:F + L]
+        return np.concatenate([fac, perm], axis=1)
+
+    # ------------------------------------------------------------------
+    def design_of(self, genome: np.ndarray) -> Design:
+        """Materialize one genome's concrete Design: decoded topology
+        plus its design genes (knobs on absent levels are inert)."""
+        g = self.repair(np.asarray(genome, np.int64).reshape(1, -1))
+        base = self._group_of_row(g[0, self.topo_off:]).design
+        if self.space is None:
+            return base
+        return self.space.design_of(base, g[0, self.design_off:
+                                            self.topo_off],
+                                    missing_ok=True)
+
+    def group_arch_params(self, genomes: np.ndarray,
+                          grp: _TopoGroup) -> ArchParams | None:
+        """Per-candidate traced arch rows under ``grp``'s topology
+        (None when there is no DesignSpace — the group's base rows
+        bind instead)."""
+        if self.space is None:
+            return None
+        g = self.design_genes(genomes)
+        uniq, inverse = np.unique(g, axis=0, return_inverse=True)
+        inverse = np.asarray(inverse).reshape(-1)
+        packed = [pack_arch_params(
+            self.space.arch_of(grp.design.arch, row, missing_ok=True))
+            for row in uniq]
+        return ArchParams(
+            storage=np.stack([p.storage for p in packed])[inverse],
+            compute=np.stack([p.compute for p in packed])[inverse],
+            structure=packed[0].structure)
+
+    def representative_design(self) -> Design:
+        """The full (deepest) topology — capability probe + log
+        metadata stand-in for "the" design of a topology search."""
+        return self.topo.full_design()
+
+    def nest_of(self, genome: np.ndarray) -> LoopNest:
+        g = self.repair(np.asarray(genome, np.int64).reshape(1, -1))
+        grp = self._group_of_row(g[0, self.topo_off:])
+        return grp.enc.nest_of(self.sub_genomes(g, grp)[0])
+
+    # ------------------------------------------------------------------
+    def decode_bucketed(self, genomes):
+        raise NotImplementedError(
+            "mixed-topology populations have no single bucket "
+            "program: group with group_by_topology() and decode each "
+            "group via sub_genomes() -> group.enc.decode_bucketed()")
+
+    def decode_population(self, genomes):
+        raise NotImplementedError(
+            "group with group_by_topology() and decode each group "
+            "via sub_genomes() -> group.enc.decode_population()")
+
+    def template_of(self, genome):
+        raise NotImplementedError(
+            "per-topology templates: use nest_of / group_by_topology")
+
+    # ------------------------------------------------------------------
+    @property
+    def mapspace_size(self) -> float:
+        size = super().mapspace_size * float(self.topo.size)
+        if self.space is not None:
+            size *= float(self.space.size)
+        return size
+
+    def describe(self) -> str:
+        out = super().describe() + "; topology x " + self.topo.describe()
+        if self.space is not None:
+            out += "; co-search x " + self.space.describe()
+        return out

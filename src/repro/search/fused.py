@@ -49,12 +49,18 @@ from ..core import compile_stats
 from ..core.arch import COMPUTE_FIELDS, STORAGE_FIELDS, pack_arch_params
 from ..core.batched import (BucketedModel, _ProgramRecord,
                             register_cache_clearer)
-from .encoding import COMPUTE_KNOB_LEVEL, CoSearchEncoding, MapspaceEncoding
+from .encoding import (COMPUTE_KNOB_LEVEL, CoSearchEncoding,
+                       MapspaceEncoding, TopologyCoSearchEncoding)
 from .log import GenerationRecord, SearchLog
 from .strategies import EvolutionStrategy, init_population
 
 #: leading-axis names of the per-generation scan outputs, in emit order
 YS_FIELDS = ("fitness", "cycles", "energy_pj", "edp", "valid", "genomes")
+#: per-generation scan outputs in device-archive (``archive_k``) mode —
+#: reduced scalars; the population-sized rows stay on device in the
+#: carried top-K buffer
+YS_TOPK_FIELDS = ("best_fitness", "best_cycles", "best_energy_pj",
+                  "best_edp", "valid_count")
 
 
 def fused_supported(enc: MapspaceEncoding) -> bool:
@@ -63,7 +69,12 @@ def fused_supported(enc: MapspaceEncoding) -> bool:
     Mapping genes always do; co-search design genes do iff every knob
     steps a *traced* arch scalar (a :data:`STORAGE_FIELDS` column or a
     ``ComputeLevel`` field) — a knob on a static field like ``word_bits``
-    reshapes the trace itself and must take the host path."""
+    reshapes the trace itself and must take the host path.  Topology
+    genes never do: the level count shapes the trace itself (a mixed-
+    topology population needs one program per topology group, not one
+    scan), so topology co-search always takes the host loop."""
+    if isinstance(enc, TopologyCoSearchEncoding):
+        return False
     if not isinstance(enc, CoSearchEncoding):
         return True
     for field, lvl, _ in enc.space.knobs:
@@ -104,19 +115,29 @@ class FusedProgram:
     pop_size, genome_size) shape.  The carry is
     ``(prng_key, pop (P,G) int32, fit (P,) f64, pending (P,G) int32)``
     — ``pending`` is the not-yet-evaluated child population the next
-    generation starts by scoring."""
+    generation starts by scoring.
+
+    With ``archive_k > 0`` the carry grows a device-resident top-K
+    archive buffer ``(arch_fit (K,) f64, arch_gen (K,G) int32)``: each
+    generation merges its evaluated rows into the buffer inside the
+    scan (dedup-masked against rows already held), the per-generation
+    scan outputs shrink to best-of-generation SCALARS
+    (:data:`YS_TOPK_FIELDS`), and the host archive fold ingests K rows
+    once per chunk instead of ``pop_size`` rows per generation —
+    population-sized data never crosses to the host."""
 
     def __init__(self, bm: BucketedModel, enc: MapspaceEncoding,
                  strat: EvolutionStrategy, *, metric: str = "edp",
-                 sgd_lr: float = 0.0, sgd_tau: float = 0.05):
+                 sgd_lr: float = 0.0, sgd_tau: float = 0.05,
+                 archive_k: int = 0):
         from jax.experimental import enable_x64
         with enable_x64():
             self._build(bm, enc, strat, metric=metric, sgd_lr=sgd_lr,
-                        sgd_tau=sgd_tau)
+                        sgd_tau=sgd_tau, archive_k=archive_k)
 
     def _build(self, bm: BucketedModel, enc: MapspaceEncoding,
                strat: EvolutionStrategy, *, metric: str,
-               sgd_lr: float, sgd_tau: float):
+               sgd_lr: float, sgd_tau: float, archive_k: int):
         import jax.numpy as jnp
 
         self.bm = bm
@@ -124,6 +145,7 @@ class FusedProgram:
         self.metric = metric
         self.sgd_lr = float(sgd_lr)
         self.sgd_tau = float(sgd_tau)
+        self.archive_k = int(archive_k)
         self.pop_size = int(strat.pop_size)
         self.tournament = int(strat.tournament)
         self.crossover_rate = float(strat.crossover_rate)
@@ -381,22 +403,48 @@ class FusedProgram:
             return fn
 
         eval_pop = jax.vmap(self._eval_one, in_axes=(0, None, None, None))
-        P = self.pop_size
+        P, K = self.pop_size, self.archive_k
 
         def run(carry, wp, base_storage, base_comp):
             def body(carry, _):
-                key, pop, fit, pending = carry
+                if K:
+                    key, pop, fit, pending, afit, agen = carry
+                else:
+                    key, pop, fit, pending = carry
                 pf, cyc, en, edp, valid, nudged = eval_pop(
                     pending, wp, base_storage, base_comp)
-                # emit PRE-nudge genomes with their true fitness: the
-                # archive and oracle walk must see evaluated pairs
-                ys = (pf, cyc, en, edp, valid, pending)
+                if K:
+                    # merge PRE-nudge (evaluated) rows into the device
+                    # top-K buffer; rows already held (finite slot with
+                    # an identical genome) are masked out so the buffer
+                    # holds K DISTINCT best rows, matching the host
+                    # fold's seen-set dedup
+                    dup = jnp.any(
+                        jnp.all(pending[:, None, :] == agen[None, :, :],
+                                axis=-1)
+                        & jnp.isfinite(afit)[None, :], axis=1)
+                    cat_f = jnp.concatenate(
+                        [afit, jnp.where(dup, jnp.inf, pf)])
+                    cat_g = jnp.concatenate([agen, pending])
+                    keep = jnp.argsort(cat_f)[:K]
+                    afit, agen = cat_f[keep], cat_g[keep]
+                    i = jnp.argmin(pf)
+                    ys = (pf[i], cyc[i], en[i], edp[i],
+                          jnp.sum(valid.astype(jnp.int64)))
+                else:
+                    # emit PRE-nudge genomes with their true fitness:
+                    # the archive and oracle walk must see evaluated
+                    # pairs
+                    ys = (pf, cyc, en, edp, valid, pending)
                 allp = jnp.concatenate([pop, nudged])
                 allf = jnp.concatenate([fit, pf])
                 order = jnp.argsort(allf)[:P]   # stable (mu+lambda) fold
                 pop2, fit2 = allp[order], allf[order]
                 key2, ksub = jrandom.split(key)
-                return (key2, pop2, fit2, self._ask(ksub, pop2, fit2)), ys
+                nxt = (key2, pop2, fit2, self._ask(ksub, pop2, fit2))
+                if K:
+                    nxt += (afit, agen)
+                return nxt, ys
 
             return lax.scan(body, carry, None, length=length)
 
@@ -425,16 +473,27 @@ class FusedProgram:
                 init_population(sub, self.enc, self.pop_size))
             pop0 = jnp.asarray(pop0, jnp.int32)
             fit0 = jnp.full((self.pop_size,), jnp.inf, jnp.float64)
-            return (key, pop0, fit0, pop0)
+            carry = (key, pop0, fit0, pop0)
+            if self.archive_k:
+                # +inf placeholder rows: the dup mask ignores them
+                # (non-finite slot) and every real row sorts above them
+                carry += (
+                    jnp.full((self.archive_k,), jnp.inf, jnp.float64),
+                    jnp.zeros((self.archive_k, self.enc.genome_size),
+                              jnp.int32))
+            return carry
 
     def inject(self, carry, genomes, fitness):
         """Host-side migrant fold (island search between chunks): merge
         (genomes, fitness) into the carried population with the same
-        stable best-of ``(mu+lambda)`` rule as ``strat.tell``."""
+        stable best-of ``(mu+lambda)`` rule as ``strat.tell``.  The
+        device archive buffer (``archive_k`` mode) is left untouched —
+        migrants were evaluated on their home island and enter its
+        archive there."""
         import jax.numpy as jnp
         from jax.experimental import enable_x64
 
-        key, pop, fit, pending = carry
+        key, pop, fit, pending, *buffer = carry
         g = self.enc.repair(np.asarray(genomes, np.int64))
         allp = np.concatenate([np.asarray(pop, np.int64), g])
         allf = np.concatenate([np.asarray(fit, np.float64),
@@ -442,7 +501,8 @@ class FusedProgram:
         order = np.argsort(allf, kind="stable")[: self.pop_size]
         with enable_x64():
             return (key, jnp.asarray(allp[order], jnp.int32),
-                    jnp.asarray(allf[order], jnp.float64), pending)
+                    jnp.asarray(allf[order], jnp.float64), pending,
+                    *buffer)
 
     # ------------------------------------------------------------------
     def invoke_chunk(self, carry, length: int):
@@ -472,7 +532,17 @@ class FusedProgram:
                           candidates=length * self.pop_size,
                           shape=shape_key):
                 carry, ys = fn(carry, wp, base_storage, base_comp)
-                ys = {k: np.asarray(v) for k, v in zip(YS_FIELDS, ys)}
+                if self.archive_k:
+                    ys = {k: np.asarray(v)
+                          for k, v in zip(YS_TOPK_FIELDS, ys)}
+                    # ONE K-row host crossing per chunk: the cumulative
+                    # top-K buffer snapshot (the carry persists, so this
+                    # is global-so-far, not per-chunk)
+                    ys["archive_fitness"] = np.asarray(carry[4])
+                    ys["archive_genomes"] = np.asarray(carry[5])
+                else:
+                    ys = {k: np.asarray(v)
+                          for k, v in zip(YS_FIELDS, ys)}
             dt = time.perf_counter() - t0
             if is_new:
                 compile_stats.record_compile_seconds(dt)
@@ -503,7 +573,8 @@ register_cache_clearer(clear_fused_cache)
 def get_fused_program(bm: BucketedModel, enc: MapspaceEncoding,
                       strat: EvolutionStrategy, *, metric: str = "edp",
                       sgd_lr: float = 0.0,
-                      sgd_tau: float = 0.05) -> FusedProgram:
+                      sgd_tau: float = 0.05,
+                      archive_k: int = 0) -> FusedProgram:
     """Memoized :class:`FusedProgram` constructor.  Keyed by the
     IDENTITY of the bucket facade's shared program record (which already
     encodes arch topology, SAF structure, workload structure, density
@@ -513,7 +584,8 @@ def get_fused_program(bm: BucketedModel, enc: MapspaceEncoding,
     lives."""
     key = (id(bm._prog), _encoding_key(enc), strat.pop_size,
            strat.tournament, strat.crossover_rate, strat.mutation_rate,
-           strat.immigrants, metric, float(sgd_lr), float(sgd_tau))
+           strat.immigrants, metric, float(sgd_lr), float(sgd_tau),
+           int(archive_k))
     with _FUSED_LOCK:
         hit = _FUSED_CACHE.get(key)
         if hit is not None:
@@ -523,7 +595,7 @@ def get_fused_program(bm: BucketedModel, enc: MapspaceEncoding,
                 compile_stats.record_program_share("fused")
                 return fp
         fp = FusedProgram(bm, enc, strat, metric=metric, sgd_lr=sgd_lr,
-                          sgd_tau=sgd_tau)
+                          sgd_tau=sgd_tau, archive_k=archive_k)
         if len(_FUSED_CACHE) >= _FUSED_CACHE_CAP:
             _FUSED_CACHE.pop(next(iter(_FUSED_CACHE)))
         _FUSED_CACHE[key] = (bm._prog, fp)
@@ -538,11 +610,19 @@ class ChunkAbsorber:
     generation inside a compiled scan has no individually measurable
     wall-clock; honest chunk timing lives in ``SearchLog.timing``).
     Mirrors ``runner.run_search``'s host-loop bookkeeping exactly, so
-    the scalar-oracle validation walk downstream is path-independent."""
+    the scalar-oracle validation walk downstream is path-independent.
 
-    def __init__(self, metric: str, archive_size: int):
+    Handles both chunk-output shapes: the legacy full-population ys
+    (:data:`YS_FIELDS`) fold per-generation, and the device-archive
+    mode (:data:`YS_TOPK_FIELDS` + the K-row buffer snapshot, from a
+    program built with ``archive_k > 0``) — which needs ``pop_size``
+    to keep the evaluation counters honest."""
+
+    def __init__(self, metric: str, archive_size: int,
+                 pop_size: int | None = None):
         self.metric = metric
         self.archive_size = archive_size
+        self.pop_size = pop_size
         self.archive_fit: list[float] = []
         self.archive_gen: list[np.ndarray] = []
         self.seen: set[bytes] = set()
@@ -553,6 +633,8 @@ class ChunkAbsorber:
         self.gen = 0
 
     def absorb(self, ys: dict, log: SearchLog | None = None) -> None:
+        if "genomes" not in ys:
+            return self._absorb_topk(ys, log)
         fits = np.asarray(ys["fitness"], np.float64)
         genomes = np.asarray(ys["genomes"], np.int64)
         for t in range(len(fits)):
@@ -589,3 +671,48 @@ class ChunkAbsorber:
                     best_energy_pj=self.best["energy_pj"],
                     best_edp=self.best["edp"], wall_time_s=None))
             self.gen += 1
+
+    def _absorb_topk(self, ys: dict,
+                     log: SearchLog | None = None) -> None:
+        """Device-archive fold: per-generation best scalars drive the
+        best-so-far trajectory and log records; the archive is the
+        cumulative K-row device buffer, REPLACED wholesale each chunk
+        (the buffer is global-top-K-so-far, a superset of anything a
+        previous chunk delivered)."""
+        if self.pop_size is None:
+            raise ValueError(
+                "ChunkAbsorber needs pop_size to absorb device-archive "
+                "(archive_k) chunk outputs")
+        bf = np.asarray(ys["best_fitness"], np.float64)
+        nv = np.asarray(ys["valid_count"], np.int64)
+        for t in range(len(bf)):
+            self.n_eval += self.pop_size
+            self.n_valid += int(nv[t])
+            if bf[t] < self.best["fitness"]:
+                self.best = {
+                    "fitness": float(bf[t]),
+                    "cycles": float(ys["best_cycles"][t]),
+                    "energy_pj": float(ys["best_energy_pj"][t]),
+                    "edp": float(ys["best_edp"][t])}
+            if log is not None:
+                log.append(GenerationRecord(
+                    generation=self.gen, evaluations=self.n_eval,
+                    valid=self.n_valid,
+                    best_fitness=self.best["fitness"],
+                    best_cycles=self.best["cycles"],
+                    best_energy_pj=self.best["energy_pj"],
+                    best_edp=self.best["edp"], wall_time_s=None))
+            self.gen += 1
+        afit = np.asarray(ys["archive_fitness"], np.float64)
+        agen = np.asarray(ys["archive_genomes"], np.int64)
+        self.archive_fit, self.archive_gen = [], []
+        self.seen = set()
+        for f, g in zip(afit, agen):
+            if not np.isfinite(f):
+                break       # placeholder rows sort last
+            b = g.tobytes()
+            if b in self.seen:
+                continue
+            self.seen.add(b)
+            self.archive_fit.append(float(f))
+            self.archive_gen.append(g.copy())

@@ -63,7 +63,8 @@ from ..core.batched import batched_supported
 from ..core.engine import Sparseloop
 from ..core.mapper import MapspaceConstraints, SearchResult, _validated_result
 from ..core.workload import Workload
-from .encoding import CoSearchEncoding, DesignSpace, MapspaceEncoding
+from .encoding import (CoSearchEncoding, DesignSpace, MapspaceEncoding,
+                       TopologyCoSearchEncoding, TopologySpace)
 from .log import GenerationRecord, SearchLog
 from .strategies import EvolutionStrategy, Strategy, make_strategy
 
@@ -221,26 +222,97 @@ class PopulationEvaluator:
         #: that decode to per-candidate traced ArchParams rows, so a
         #: mixed-design population STILL rides one compiled program
         self.cosearch = isinstance(enc, CoSearchEncoding)
+        #: (topology, design, mapping) co-search: the genome also
+        #: carries topology genes — the population groups by canonical
+        #: topology key and rides O(topology groups) compiled programs
+        self.topology = isinstance(enc, TopologyCoSearchEncoding)
+        #: per-topology-group engines (topology co-search only)
+        self._group_engines: dict[tuple, Sparseloop] = {}
         #: scalar-path oracle per distinct design-gene row (co-search
         #: populations repeat a handful of design points; don't rebuild
         #: a Design + engine per candidate per generation)
         self._scalar_models: dict[bytes, Sparseloop] = {}
 
     def _scalar_model(self, genome) -> Sparseloop:
-        if not self.cosearch:
+        if self.topology:
+            g = np.asarray(genome, np.int64).reshape(1, -1)
+            key = self.enc.repair(g)[0, self.enc.design_off:].tobytes()
+        elif self.cosearch:
+            key = self.enc.design_genes(genome)[0].tobytes()
+        else:
             return self.model
-        key = self.enc.design_genes(genome)[0].tobytes()
         model = self._scalar_models.get(key)
         if model is None:
             model = Sparseloop(self.enc.design_of(genome))
             self._scalar_models[key] = model
         return model
 
+    def _group_engine(self, grp) -> Sparseloop:
+        engine = self._group_engines.get(grp.key)
+        if engine is None:
+            engine = Sparseloop(grp.design)
+            self._group_engines[grp.key] = engine
+        return engine
+
+    def _eval_topology(self, genomes: np.ndarray, out: dict,
+                       threshold: int) -> dict[str, np.ndarray]:
+        """Mixed-topology population dispatch: group by canonical
+        topology key, decode each group through its OWN sub-encoding,
+        and evaluate it through its group's compiled bucket program.
+
+        Every group is padded (by repeating its last candidate) to the
+        FULL population size before dispatch, so each topology sees
+        exactly one compiled input shape per run no matter how the
+        per-generation group mix shifts — the compile count is
+        O(topology groups x buckets), independent of population size
+        and of how evenly the strategy samples the topologies."""
+        n = len(genomes)
+        if not (self.batched and self.config.bucketed
+                and n >= threshold):
+            compile_stats.record_scalar_evals(n)
+            for i, g in enumerate(genomes):
+                model = self._scalar_model(g)
+                try:
+                    ev = model.evaluate(
+                        self.workload, self.enc.nest_of(g),
+                        check_capacity=self.check_capacity)
+                except ValueError:
+                    continue
+                out["cycles"][i] = ev.cycles
+                out["energy_pj"][i] = ev.energy_pj
+                out["edp"][i] = ev.edp
+                out["valid"][i] = ev.result.valid
+            return out
+
+        for grp, idx in self.enc.group_by_topology(genomes):
+            k = len(idx)
+            sel = idx if k == n else np.concatenate(
+                [idx, np.repeat(idx[-1:], n - k)])
+            sub = self.enc.sub_genomes(genomes[sel], grp)
+            bucket, bounds, ids = grp.enc.decode_bucketed(sub)
+            ap = self.enc.group_arch_params(genomes[sel], grp)
+            bm = self._group_engine(grp).bucketed_model(
+                self.workload, bucket,
+                check_capacity=self.check_capacity)
+            if self.service is not None:
+                res = self.service.evaluate(bm, bounds, rank_ids=ids,
+                                            arch_params=ap)
+            else:
+                res = bm.evaluate(bounds, ids, mesh=self.mesh,
+                                  arch_params=ap)
+            for m in METRICS:
+                out[m][idx] = np.asarray(res[m])[:k]
+            out["valid"][idx] = np.asarray(res["valid"])[:k]
+        return out
+
     def __call__(self, genomes: np.ndarray) -> dict[str, np.ndarray]:
         n = len(genomes)
         out = {k: np.full(n, np.inf) for k in METRICS}
         out["valid"] = np.zeros(n, dtype=bool)
         threshold = max(1, self.config.batch_threshold)
+
+        if self.topology:
+            return self._eval_topology(genomes, out, threshold)
 
         if (self.batched and self.config.bucketed and n >= threshold):
             bucket, bounds, ids = self.enc.decode_bucketed(genomes)
@@ -359,10 +431,15 @@ def _run_fused(evaluate: PopulationEvaluator, enc, strat, key,
 
     bm = evaluate.model.bucketed_model(
         evaluate.workload, enc.bucket, check_capacity=check_capacity)
+    # device-resident archive: the scan carries a top-K (fitness,
+    # genome) buffer and emits per-generation scalars, so the host
+    # fold ingests K rows per chunk instead of pop_size per generation
     fp = get_fused_program(bm, enc, strat, metric=metric,
-                           sgd_lr=sgd_lr, sgd_tau=sgd_tau)
+                           sgd_lr=sgd_lr, sgd_tau=sgd_tau,
+                           archive_k=ARCHIVE_SIZE)
     carry = fp.init_carry(key)
-    absorber = ChunkAbsorber(metric, ARCHIVE_SIZE)
+    absorber = ChunkAbsorber(metric, ARCHIVE_SIZE,
+                             pop_size=strat.pop_size)
     chunks: list[dict] = []
     done = 0
     while done < generations:
@@ -397,6 +474,7 @@ def run_search(design, workload: Workload,
                batch_threshold: int | None = None,
                log_to: SearchLog | None = None,
                design_space: DesignSpace | None = None,
+               topology_space: TopologySpace | None = None,
                service=None,
                fused: bool | None = None,
                sgd_lr: float = 0.0,
@@ -422,6 +500,19 @@ def run_search(design, workload: Workload,
     ``ArchParams`` rows), and the returned result's winner — validated
     by the scalar oracle *under its own design* — carries that design
     in ``SearchResult.best_design``.
+
+    ``topology_space`` (a :class:`TopologySpace`) goes one further:
+    (topology, design, mapping) co-search.  Pass ``design=None`` — the
+    designs are decoded from the genome's topology (+ design) genes,
+    and there is no single base design.  The population groups by
+    canonical topology key and rides O(topology groups) compiled
+    programs per run (each group padded to the full population size so
+    its program compiles for ONE shape); the archive walk validates
+    every candidate under its *own* decoded ``Design``, which rides
+    out as ``SearchResult.best_design``.  Composes with
+    ``design_space`` (knobs naming levels a topology dropped are inert
+    there) and with ``service``; the fused scan path does not support
+    heterogeneous topologies and falls back to the host loop.
 
     ``service`` (a ``repro.dse`` ServiceClient or EvaluationService)
     routes every batched population evaluation through a persistent
@@ -449,8 +540,17 @@ def run_search(design, workload: Workload,
         raise ValueError(f"metric must be one of {METRICS}, got {metric!r}")
     cons = cons or MapspaceConstraints()
     strat = make_strategy(strategy, **strategy_options)
-    if design_space is not None:
-        enc: MapspaceEncoding = CoSearchEncoding(
+    if topology_space is not None:
+        if design is not None:
+            raise ValueError(
+                "topology co-search decodes designs from the "
+                "TopologySpace genome; pass design=None (the base "
+                "levels live in the space's slots)")
+        enc: MapspaceEncoding = TopologyCoSearchEncoding(
+            workload, cons, topology_space, design_space)
+        design = enc.representative_design()
+    elif design_space is not None:
+        enc = CoSearchEncoding(
             workload, design.arch.num_levels, cons, design_space, design)
     else:
         enc = MapspaceEncoding(workload, design.arch.num_levels, cons)
@@ -527,9 +627,10 @@ def run_search(design, workload: Workload,
     # winner's design rides out on the result
     order = np.argsort(archive_fit, kind="stable")[:ARCHIVE_SIZE]
     model_at = None
-    if design_space is not None:
+    if design_space is not None or topology_space is not None:
         # reuse the evaluator's per-design oracle cache: archive rows
-        # repeat a handful of design points
+        # repeat a handful of (topology, design) points, and each
+        # candidate validates under its OWN decoded Design
         model_at = (lambda i:
                     evaluate._scalar_model(archive_gen[order[i]]))
     result = _validated_result(

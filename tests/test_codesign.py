@@ -205,7 +205,10 @@ def test_design_grid_parity_shared_program():
                     ev.energy_pj, rel=1e-6)
 
 
-def test_evaluate_designs_rejects_mismatches():
+def test_evaluate_designs_groups_heterogeneous_topologies():
+    """Level-count mismatches (the shared nests can't lower) still
+    raise; a Design with a DIFFERENT SAF spec now rides its own
+    topology group and matches a dedicated engine exactly."""
     base = coordinate_list_design(two_level_arch())
     model = Sparseloop(base)
     wl = _workloads()[0]
@@ -214,11 +217,19 @@ def test_evaluate_designs_rejects_mismatches():
              for g in enc.random_population(jrandom.PRNGKey(0), 2)]
     with pytest.raises(ValueError, match="topology"):
         model.evaluate_designs([three_level_arch()], wl, nests)
-    other = coordinate_list_design(two_level_arch())
     other = dataclasses.replace(
-        other, safs=dataclasses.replace(other.safs, actions=()))
-    with pytest.raises(ValueError, match="SAF"):
-        model.evaluate_designs([other], wl, nests)
+        base, safs=dataclasses.replace(base.safs, actions=()),
+        name="no-actions")
+    got_base, got_other = model.evaluate_designs([base, other], wl,
+                                                 nests)
+    ref_base = model.evaluate_batch(wl, nests)
+    ref_other = Sparseloop(other).evaluate_batch(wl, nests)
+    for got, ref in ((got_base, ref_base), (got_other, ref_other)):
+        for k in ("cycles", "energy_pj", "edp"):
+            np.testing.assert_allclose(got[k], ref[k], rtol=1e-9)
+    # the SAF placements really differ: skipping changed the metrics
+    assert not np.allclose(got_base["energy_pj"],
+                           got_other["energy_pj"])
 
 
 def test_arch_params_topology_mismatch_raises():

@@ -1,0 +1,254 @@
+"""Topology-as-data (``TopologySpace`` / ``TopologyCoSearchEncoding``).
+
+The contracts under test: every in-range (and out-of-range, via the
+mod repair) topology gene row decodes to a VALID ``(Architecture,
+SAFSpec)`` — level count within bounds, SAFs attached only to present
+levels, scalar oracle evaluable; derivation-equal gene rows (inert SAF
+genes of absent slots) share one canonical topology key, and the key
+ignores scalar provisioning entirely; a mixed-topology ``run_search``
+compiles at most one program family per DISTINCT topology
+(``enumerate_designs``) with zero scalar evaluations, and its winner is
+re-validated by the scalar oracle under its own decoded design; the
+DSE service labels batches by topology group and counts the groups it
+is serving; and the device-resident top-K archive (``archive_k``) chunk
+outputs fold to the SAME trajectory, best and winner as the legacy
+full-population host fold.
+"""
+import jax.random as jrandom
+import numpy as np
+import pytest
+
+from repro.core import Sparseloop, compile_stats, matmul
+from repro.core.arch import (Architecture, ComputeLevel, StorageLevel,
+                             topology_key)
+from repro.core.mapper import MapspaceConstraints
+from repro.core.presets import coordinate_list_design, two_level_arch
+from repro.core.taxonomy import SAFKind, TensorFormat
+from repro.dse import EvaluationService
+from repro.search import (ChunkAbsorber, LevelSlot, MapspaceEncoding,
+                          SAF_NONE, SAFOption, SearchLog,
+                          SearchConfig, TopologyCoSearchEncoding,
+                          TopologySpace, get_fused_program,
+                          make_strategy, run_search)
+
+WL = matmul(32, 32, 32, densities={"A": ("uniform", 0.3),
+                                   "B": ("uniform", 0.4)})
+#: spatial constraints must stay inside the stable (required) inner
+#: suffix — level-from-inner 0 is SPad in EVERY decoded topology below
+CONS = MapspaceConstraints(budget=128, seed=0, spatial={0: {"n": 4}})
+#: tiny test populations must still take the batched/bucketed route
+#: (the scalar fallback would sidestep the compile accounting)
+BATCHED = SearchConfig(batch_threshold=1)
+
+SKIP = SAFOption(
+    "skip",
+    formats=(("A", TensorFormat.of("UOP", "CP", coord_bits=4)),
+             ("B", TensorFormat.of("UOP", "CP", coord_bits=4))),
+    actions=((SAFKind.SKIP, "Z", ("A", "B")),))
+
+
+def _topo() -> TopologySpace:
+    return TopologySpace(
+        slots=(
+            LevelSlot(StorageLevel("DRAM", float("inf"), 16, 200.0,
+                                   200.0, 0.0)),
+            LevelSlot(StorageLevel("GLB", 96 * 1024, 128, 6.0, 6.0,
+                                   0.05),
+                      optional=True, saf_options=(SAF_NONE, SKIP)),
+            LevelSlot(StorageLevel("SPad", 512, 128, 1.2, 1.2, 0.02),
+                      saf_options=(SAF_NONE, SKIP)),
+        ),
+        compute=ComputeLevel("MAC", instances=64, mac_energy_pj=1.0,
+                             gated_energy_pj=0.05),
+        name="topo")
+
+
+# ----------------------------------------------------------------------
+# decode validity: every gene row is a working design, by construction
+# ----------------------------------------------------------------------
+def test_every_random_genome_decodes_to_valid_architecture():
+    ts = _topo()
+    slot_names = [s.level.name for s in ts.slots]
+    known_keys = {k for k, _ in ts.enumerate_designs()}
+    rng = np.random.default_rng(0)
+    # deliberately out-of-range (negative included): repair is a mod
+    genes = rng.integers(-50, 50, size=(64, ts.num_genes))
+    for row in genes:
+        arch, safs = ts.decode(row)
+        assert ts.min_levels <= arch.num_levels <= ts.max_levels
+        names = [lv.name for lv in arch.levels]
+        # present levels are a subsequence of the slots, order kept
+        assert [n for n in slot_names if n in names] == names
+        present = set(names) | {"compute"}
+        for lvl, _t in safs.formats:
+            assert lvl in present
+        for act in safs.actions:
+            assert act.level in present
+        assert topology_key(arch, safs) in known_keys
+
+
+def test_decoded_designs_evaluate_under_scalar_oracle():
+    ts = _topo()
+    designs = ts.enumerate_designs()
+    assert len(designs) == 6        # {2,3 levels} x {SPad saf} (x GLB saf)
+    for _key, d in designs:
+        enc = MapspaceEncoding(WL, d.arch.num_levels, CONS)
+        nest = enc.nest_of(np.zeros(enc.genome_size, np.int64))
+        ev = Sparseloop(d).evaluate(WL, nest, check_capacity=False)
+        assert np.isfinite(ev.edp) and ev.edp > 0
+
+
+# ----------------------------------------------------------------------
+# canonical topology keys
+# ----------------------------------------------------------------------
+def test_topology_key_ignores_inert_genes_of_absent_slots():
+    ts = _topo()
+    # GLB absent (presence gene 0): its SAF gene is inert — every
+    # value of it derives the SAME topology
+    rows = [np.array([0, glb_saf, spad_saf]) for glb_saf in (0, 1)
+            for spad_saf in (0,)]
+    keys = {ts.topology_key_of(r) for r in rows}
+    assert len(keys) == 1
+    names = {ts.design_of(r).name for r in rows}
+    assert names == {"topo[DRAM/SPad]"}
+    # ...which is why distinct topologies < gene-row count
+    assert len(ts.enumerate_designs()) < ts.size
+
+
+def test_topology_key_ignores_scalar_provisioning():
+    a = two_level_arch(buffer_kwords=8)
+    b = two_level_arch(buffer_kwords=64, dram_bw=128, pes=16)
+    assert topology_key(a) == topology_key(b)
+    d1, d2 = coordinate_list_design(a), coordinate_list_design(b)
+    assert topology_key(d1.arch, d1.safs) == topology_key(d2.arch,
+                                                          d2.safs)
+    # ...but SAF placement IS the key: dense vs coordinate-list differ
+    assert topology_key(a) != topology_key(d1.arch, d1.safs)
+
+
+# ----------------------------------------------------------------------
+# mixed-topology co-search: O(topology groups) compiles, oracle winner
+# ----------------------------------------------------------------------
+def test_mixed_population_groups_cover_and_partition():
+    ts = _topo()
+    enc = TopologyCoSearchEncoding(WL, CONS, ts)
+    pop = enc.structured_population(jrandom.PRNGKey(1), 48)
+    groups = enc.group_by_topology(pop)
+    assert len(groups) <= len(ts.enumerate_designs())
+    idx = np.sort(np.concatenate([i for _, i in groups]))
+    np.testing.assert_array_equal(idx, np.arange(48))     # a partition
+    for grp, i in groups:
+        assert {enc.design_of(pop[j]).name for j in i} == \
+            {grp.design.name}
+        sub = enc.sub_genomes(pop[i], grp)
+        assert sub.shape == (len(i), grp.enc.genome_size)
+
+
+def test_mixed_topology_search_compiles_once_per_group():
+    ts = _topo()
+    bound = len(ts.enumerate_designs())
+    with compile_stats.track() as st:
+        r = run_search(None, WL, CONS, strategy="es", key=0, mesh=None,
+                       topology_space=ts, config=BATCHED, pop_size=16)
+    # one padded bucket family per topology group, however many
+    # candidates — and never a scalar-oracle fallback
+    assert 0 < st.compiles <= bound
+    assert st.scalar_evals == 0
+    assert r.best is not None and r.best.result.valid
+    assert r.best_design is not None
+    # the winner revalidates under ITS OWN decoded design
+    oracle = Sparseloop(r.best_design).evaluate(WL, r.best_nest)
+    assert r.best.edp == pytest.approx(oracle.edp, rel=1e-9)
+
+
+def test_topology_search_is_deterministic():
+    ts = _topo()
+    runs = [run_search(None, WL, CONS, strategy="es", key=3, mesh=None,
+                       topology_space=ts, config=BATCHED, pop_size=16)
+            for _ in range(2)]
+    assert runs[0].log.to_json(timing=False) == \
+        runs[1].log.to_json(timing=False)
+    assert runs[0].best_design.name == runs[1].best_design.name
+
+
+def test_constraint_validation_fails_fast():
+    ts = _topo()
+    with pytest.raises(ValueError, match="stable inner suffix"):
+        TopologyCoSearchEncoding(
+            WL, MapspaceConstraints(budget=64, seed=0,
+                                    spatial={1: {"n": 4}}), ts)
+    with pytest.raises(ValueError, match="permutations"):
+        TopologyCoSearchEncoding(
+            WL, MapspaceConstraints(budget=64, seed=0,
+                                    permutations={0: ("m", "n", "k")}),
+            ts)
+
+
+# ----------------------------------------------------------------------
+# DSE service: per-topology-group batching is observable
+# ----------------------------------------------------------------------
+def test_service_counts_topology_groups():
+    ts = _topo()
+    designs = [d for _, d in ts.enumerate_designs()[:2]]
+    svc = EvaluationService(autostart=False)
+    futs = []
+    for d in designs:
+        enc = MapspaceEncoding(WL, d.arch.num_levels, CONS)
+        pop = enc.random_population(jrandom.PRNGKey(0), 8)
+        bucket, bounds, ids = enc.decode_bucketed(pop)
+        bm = Sparseloop(d).bucketed_model(WL, bucket)
+        futs.append(svc.submit(bm, bounds, rank_ids=ids, client="mix"))
+    # heterogeneous topologies drain in ONE pass — separate batches,
+    # no starvation — and the service reports the group count
+    assert svc.drain_once() == 2
+    for fut in futs:
+        res = fut.result(1)
+        assert np.asarray(res["edp"]).shape == (8,)
+    st = svc.stats()
+    assert (st["requests"], st["batches"]) == (2, 2)
+    assert st["groups"] == 2
+    svc.close()
+
+
+# ----------------------------------------------------------------------
+# device-resident archive top-K: parity with the host-side fold
+# ----------------------------------------------------------------------
+def test_device_archive_matches_host_fold():
+    design = coordinate_list_design(two_level_arch(buffer_kwords=8))
+    cons = MapspaceConstraints(budget=96, seed=0, spatial={1: {"n": 4}})
+    enc = MapspaceEncoding(WL, 2, cons)
+    bucket, _, _ = enc.decode_bucketed(
+        enc.random_population(jrandom.PRNGKey(0), 4))
+    bm = Sparseloop(design).bucketed_model(WL, bucket)
+    strat = make_strategy("es")
+    K = 32
+    states = {}
+    for k in (0, K):
+        fp = get_fused_program(bm, enc, strat, archive_k=k)
+        absorber = ChunkAbsorber("edp", K, pop_size=strat.pop_size)
+        log = SearchLog(strategy="es", metric="edp")
+        carry = fp.init_carry(7)
+        for chunk in (3, 3):        # two chunks: the buffer is cumulative
+            carry, ys = fp.invoke_chunk(carry, chunk)
+            absorber.absorb(ys, log)
+        states[k] = (absorber, log)
+    host, device = states[0][0], states[K][0]
+    # identical trajectory records (wall-time-free by construction)
+    assert states[0][1].to_json(timing=False) == \
+        states[K][1].to_json(timing=False)
+    assert host.best == device.best
+    assert (host.n_eval, host.n_valid) == (device.n_eval,
+                                           device.n_valid)
+    # the device buffer is the global top-K: its best row IS the host
+    # archive's best row
+    hi = int(np.argmin(host.archive_fit))
+    di = int(np.argmin(device.archive_fit))
+    assert host.archive_fit[hi] == device.archive_fit[di]
+    np.testing.assert_array_equal(host.archive_gen[hi],
+                                  device.archive_gen[di])
+    # ...and every device row appears in the (unbounded-within-chunk)
+    # host fold with the same fitness
+    host_map = {g.tobytes(): f for f, g in zip(host.archive_fit,
+                                               host.archive_gen)}
+    for f, g in zip(device.archive_fit, device.archive_gen):
+        assert host_map.get(g.tobytes()) == f
